@@ -1,0 +1,73 @@
+"""Shared benchmark fixtures: graphs, workloads, timing."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fixtures import scale_free_graph
+from repro.core.patterns import generate_workload
+from repro.core.ring import LabeledGraph, Ring
+
+# benchmark scale: Wikidata-shaped (hub-heavy, Zipf labels), CPU-friendly
+BENCH_V = 4_000
+BENCH_P = 16
+BENCH_E = 30_000
+RESULT_LIMIT = 50_000
+TIMEOUT_S = 5.0
+
+
+_cache = {}
+
+
+def bench_graph() -> LabeledGraph:
+    if "g" not in _cache:
+        _cache["g"] = scale_free_graph(BENCH_V, BENCH_P, BENCH_E, seed=7)
+    return _cache["g"]
+
+
+def bench_ring() -> Ring:
+    if "ring" not in _cache:
+        _cache["ring"] = Ring(bench_graph())
+    return _cache["ring"]
+
+
+def bench_workload(n=40, seed=13):
+    return generate_workload(n, num_preds=BENCH_P, num_nodes=BENCH_V,
+                             seed=seed)
+
+
+@dataclass
+class QueryTiming:
+    pattern: str
+    expr: str
+    seconds: float
+    results: int
+    timed_out: bool
+
+
+def timed_eval(fn: Callable, expr, s, o, pattern) -> QueryTiming:
+    t0 = time.time()
+    timed_out = False
+    try:
+        res = fn(expr, s, o)
+        n = len(res)
+    except TimeoutError:
+        timed_out, n = True, 0
+    dt = time.time() - t0
+    if dt > TIMEOUT_S:
+        timed_out = True
+    return QueryTiming(pattern, expr, dt, n, timed_out)
+
+
+def summarize(times: List[QueryTiming]):
+    arr = np.array([t.seconds for t in times])
+    return {
+        "average_s": float(arr.mean()),
+        "median_s": float(np.median(arr)),
+        "p95_s": float(np.percentile(arr, 95)),
+        "timeouts": int(sum(t.timed_out for t in times)),
+        "total_results": int(sum(t.results for t in times)),
+    }

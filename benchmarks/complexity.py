@@ -1,0 +1,46 @@
+"""Theorem-4.1 validation: measured work (node-state activations and
+wavelet-tree node visits) must scale with |G'_E| (the query-induced
+product subgraph), NOT with |G| x |NFA|.  Reports the fitted slope and
+correlation on random (graph, query) samples."""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from .helpers_shim import rand_expr_ast
+from repro.core.fixtures import random_graph
+from repro.core.oracle import product_subgraph_size
+from repro.core.ring import Ring
+from repro.core.rpq import QueryStats, RingRPQ
+
+
+def run(trials: int = 60) -> list:
+    rnd = random.Random(17)
+    xs, ys, zs = [], [], []
+    for t in range(trials):
+        V = rnd.randrange(20, 120)
+        P = rnd.randrange(2, 5)
+        E = rnd.randrange(50, 400)
+        g = random_graph(V, P, E, seed=1000 + t, pred_zipf=False)
+        expr = str(rand_expr_ast(rnd, 2, P))
+        obj = rnd.randrange(V)
+        stats = QueryStats()
+        RingRPQ(Ring(g)).eval(expr, obj=obj, stats=stats)
+        nodes, edges = product_subgraph_size(g, expr, obj=obj)
+        xs.append(nodes + edges + 1)
+        ys.append(stats.node_state_activations + 1)
+        zs.append(stats.wt_nodes_visited + 1)
+    xs, ys, zs = map(np.asarray, (xs, ys, zs))
+    corr = float(np.corrcoef(xs, ys)[0, 1])
+    slope = float(np.polyfit(xs, ys, 1)[0])
+    # log-log slope for the wavelet-visit cost (expected ~1: linear in
+    # |G'_E| with a log|G| factor)
+    ll = float(np.polyfit(np.log(xs), np.log(zs), 1)[0])
+    return [
+        ("complexity/activations_vs_GE_corr", corr),
+        ("complexity/activations_per_GE_slope", slope),
+        ("complexity/wt_visits_loglog_slope", ll),
+        ("complexity/max_activation_ratio",
+         float((ys / np.maximum(xs, 1)).max())),
+    ]

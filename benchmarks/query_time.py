@@ -1,0 +1,81 @@
+"""Table-2 analogue: query-time statistics per engine over the Table-1
+pattern mix (paper: ring fastest on average, 1.67x vs Blazegraph; fewest
+timeouts; 4.41x faster on c-to-v).
+
+Engines:
+  ring          — the paper's algorithm on the ring (faithful, sound D[v])
+  ring_paperdv  — literal Sec-4.2 D[v] rule (can under-report; speed ref)
+  classical     — node-at-a-time product-graph BFS over CSR (the textbook
+                  baseline every system reduces to)
+  dense-tpu     — the frontier-synchronous TPU engine (jit on CPU here)
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.dense import DenseRPQ
+from repro.core.oracle import eval_oracle
+from repro.core.ring import Ring
+from repro.core.rpq import RingRPQ
+from .common import (RESULT_LIMIT, bench_graph, bench_ring, bench_workload,
+                     summarize, timed_eval, QueryTiming)
+
+
+def _engines():
+    g = bench_graph()
+    ring = bench_ring()
+    faithful = RingRPQ(ring)
+    paperdv = RingRPQ(ring, paper_dv=True)
+    dense = DenseRPQ(g, source_batch=8)
+    from .common import TIMEOUT_S
+    return {
+        "ring": lambda e, s, o: faithful.eval(e, s, o, limit=RESULT_LIMIT,
+                                              deadline_s=TIMEOUT_S),
+        "ring_paperdv": lambda e, s, o: paperdv.eval(e, s, o,
+                                                     limit=RESULT_LIMIT,
+                                                     deadline_s=TIMEOUT_S),
+        "classical": lambda e, s, o: eval_oracle(g, e, s, o),
+        "dense-tpu": lambda e, s, o: dense.eval(e, s, o, limit=RESULT_LIMIT),
+    }
+
+
+def run(n_queries: int = 20) -> list:
+    wl = bench_workload(n_queries)
+    # the classical baseline explodes on v-to-v over 20k nodes (it BFSes
+    # from every node) — mirror the paper's per-query timeout by capping
+    # it to c-to-v / v-to-c patterns and counting the rest as timeouts.
+    rows = []
+    per_engine: Dict[str, List[QueryTiming]] = defaultdict(list)
+    engines = _engines()
+    for expr, s, o, pat in wl.queries:
+        for name, fn in engines.items():
+            if name == "classical" and s is None and o is None:
+                per_engine[name].append(
+                    QueryTiming(pat, expr, 10.0, 0, True))
+                continue
+            per_engine[name].append(timed_eval(fn, expr, s, o, pat))
+
+    for name, times in per_engine.items():
+        s_ = summarize(times)
+        rows.append((f"query_time/{name}/average_us", s_["average_s"] * 1e6))
+        rows.append((f"query_time/{name}/median_us", s_["median_s"] * 1e6))
+        rows.append((f"query_time/{name}/timeouts", s_["timeouts"]))
+        # c-to-v split (84.7% of the paper's log)
+        cv = [t for t, (e, s, o, p) in zip(times, wl.queries)
+              if (s is not None) != (o is not None)]
+        if cv:
+            rows.append((f"query_time/{name}/c_to_v_average_us",
+                         float(np.mean([t.seconds for t in cv]) * 1e6)))
+    # headline: ring vs classical speedup (the paper's 1.67x analogue)
+    r = summarize(per_engine["ring"])
+    c = summarize(per_engine["classical"])
+    d = summarize(per_engine["dense-tpu"])
+    rows.append(("query_time/ring_speedup_vs_classical_avg",
+                 c["average_s"] / max(r["average_s"], 1e-9)))
+    rows.append(("query_time/dense_speedup_vs_ring_avg",
+                 r["average_s"] / max(d["average_s"], 1e-9)))
+    return rows

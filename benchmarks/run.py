@@ -1,0 +1,71 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only space,query_time,...]
+
+Prints ``name,us_per_call,derived`` CSV (derived = the value when the row
+is not a latency).  Roofline terms come from the dry-run artifacts
+(see launch/roofline.py), re-emitted here for one-stop reporting.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _rows_roofline():
+    from pathlib import Path
+    art = Path("artifacts/dryrun")
+    if not art.exists():
+        return [("roofline/skipped_no_artifacts", 1)]
+    from repro.launch.roofline import load_rows
+    rows = []
+    for r in load_rows(str(art)):
+        if r["mesh"] != "16x16":
+            continue
+        tag = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append((f"{tag}/t_compute_us", r["t_compute_s"] * 1e6))
+        rows.append((f"{tag}/t_memory_us", r["t_memory_s"] * 1e6))
+        rows.append((f"{tag}/t_collective_us", r["t_collective_s"] * 1e6))
+        rows.append((f"{tag}/model_over_hlo", r["model_over_hlo"]))
+        rows.append((f"{tag}/roofline_fraction", r["roofline_fraction"]))
+    return rows
+
+
+SUITES = {
+    "space": lambda: __import__("benchmarks.space", fromlist=["run"]).run(),
+    "query_time": lambda: __import__("benchmarks.query_time",
+                                     fromlist=["run"]).run(),
+    "fig8": lambda: __import__("benchmarks.patterns_fig8",
+                               fromlist=["run"]).run(),
+    "complexity": lambda: __import__("benchmarks.complexity",
+                                     fromlist=["run"]).run(),
+    "kernels": lambda: __import__("benchmarks.kernel_bench",
+                                  fromlist=["run"]).run(),
+    "roofline": _rows_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    picks = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in picks:
+        t0 = time.time()
+        try:
+            rows = SUITES[name]()
+        except Exception as e:  # a failed suite must not hide the others
+            print(f"{name}/ERROR,,{type(e).__name__}:{e}")
+            continue
+        for key, val in rows:
+            if key.endswith("_us"):
+                print(f"{key},{val:.2f},")
+            else:
+                print(f"{key},,{val}")
+        print(f"{name}/_suite_seconds,,{time.time()-t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

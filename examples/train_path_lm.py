@@ -1,0 +1,65 @@
+"""End-to-end driver: train an LM on RPQ-sampled path corpora.
+
+    PYTHONPATH=src python examples/train_path_lm.py            # ~1M params, 300 steps
+    PYTHONPATH=src python examples/train_path_lm.py --full     # smollm-135M config
+
+The data pipeline is the paper integration (DESIGN.md §5): training
+sequences are edge-label paths sampled from a scale-free graph, filtered
+by a Glushkov automaton so every sequence matches the RPQ — the LM learns
+the regular language of graph paths.  Checkpoint/resume is on: re-running
+the same command continues from the last checkpoint.
+"""
+import argparse
+import sys
+from dataclasses import replace
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.fixtures import scale_free_graph
+from repro.data.pipeline import PathCorpus
+from repro.train import loop, optim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="the real smollm-135m config (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--expr", type=str, default="(0|1)/2*/(3|4)+")
+    ap.add_argument("--ckpt", type=str, default="artifacts/path_lm_ckpt")
+    args = ap.parse_args()
+
+    g = scale_free_graph(2000, 8, 16000, seed=11)
+    data = PathCorpus(g, seq_len=128, global_batch=8, expr=args.expr, seed=0)
+    print(f"path corpus over |V|={g.num_nodes} |E|={g.s.size}, "
+          f"RPQ={args.expr!r}, vocab={data.vocab_size}")
+
+    base = get_config("smollm-135m")
+    if args.full:
+        cfg = replace(base, vocab_size=data.vocab_size, tp_divisor=1)
+    else:
+        cfg = replace(smoke_variant(base), vocab_size=data.vocab_size,
+                      num_layers=4, d_model=128, num_heads=4, num_kv_heads=2,
+                      head_dim=32, d_ff=512)
+    nparams = cfg.param_count()
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} (~{nparams/1e6:.1f}M params)")
+
+    rep = loop.train(
+        cfg, data, num_steps=args.steps,
+        opt_cfg=optim.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+        ckpt_dir=args.ckpt, save_every=100, log_every=20,
+    )
+    print(f"\nsteps run: {rep.steps_run} (resumed from: {rep.resumed_from})")
+    print(f"loss: first5={np.mean(rep.losses[:5]):.3f} "
+          f"last5={np.mean(rep.losses[-5:]):.3f}")
+    uniform = np.log(data.vocab_size)
+    print(f"uniform baseline: {uniform:.3f} — the LM learned the RPQ "
+          f"structure: {np.mean(rep.losses[-5:]) < uniform - 1.0}")
+
+
+if __name__ == "__main__":
+    main()

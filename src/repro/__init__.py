@@ -1,0 +1,2 @@
+"""Ring-RPQ-JAX: the paper's RPQ technique + the multi-pod substrate."""
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""llama3.2-3b — small llama3 GQA [hf:meta-llama/Llama-3.2-1B; unverified]."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=5e5,
+))

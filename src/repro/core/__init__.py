@@ -1,0 +1,6 @@
+"""The paper's contribution: ring index + Glushkov bit-parallel RPQs."""
+from .glushkov import Glushkov
+from .regex import parse, reverse, nullable
+from .ring import LabeledGraph, Ring
+from .rpq import QueryStats, RingRPQ
+from .wavelet import BitVector, WaveletTree

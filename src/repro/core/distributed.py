@@ -1,0 +1,185 @@
+"""Distributed frontier-synchronous RPQ BFS via shard_map.
+
+Sharding design (DESIGN.md §4):
+  * graph nodes are range-partitioned over the data axes (``pod`` x
+    ``data``) — shard k owns nodes [k*Vl, (k+1)*Vl);
+  * edges live with the *owner of their backward-push destination*
+    (the subject), so scatter-OR updates are always shard-local;
+  * each superstep all-gathers the frontier planes (the only collective:
+    V*S bytes) and computes gather -> Fact-1 mask -> bit-matrix step ->
+    segment-OR entirely locally.
+
+The NFA-state axis S is tiny and replicated.  The ``model`` axis is free
+for intra-shard tiling (used by the LM side; the RPQ superstep keeps it
+for edge-parallel sweeps: edges within a shard are split over ``model``
+and combined with a local psum-OR).
+
+Two data layouts:
+  * planes  — [V, S] int8 (reference; matmul/segment_max path);
+  * packed  — [V, W] uint32 bit-parallel words (the paper-faithful word
+    representation; steps through the Pallas kernels in ``repro.kernels``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .dense import DenseGraph, _plane_tables
+from .glushkov import Glushkov
+
+
+@dataclass
+class ShardedGraph:
+    """Edges partitioned by destination(subject)-owner, padded to equal
+    per-shard length.  Padding edges carry the reserved label
+    ``num_labels`` whose B row is all-zero — they contribute nothing."""
+
+    subj_local: np.ndarray  # [shards, E_max] int32 (owner-local row ids)
+    pred: np.ndarray        # [shards, E_max] int32 (padded: num_labels)
+    obj: np.ndarray         # [shards, E_max] int32 (global node ids)
+    nodes_per_shard: int
+    num_shards: int
+    num_nodes_padded: int
+    num_labels: int
+
+    @classmethod
+    def from_dense(cls, dg: DenseGraph, num_shards: int) -> "ShardedGraph":
+        V = dg.num_nodes
+        Vl = -(-V // num_shards)
+        Vp = Vl * num_shards
+        subj = np.asarray(dg.subj)
+        pred = np.asarray(dg.pred)
+        obj = np.asarray(dg.obj)
+        owner = subj // Vl
+        emax = max(1, int(np.bincount(owner, minlength=num_shards).max()))
+        sl = np.zeros((num_shards, emax), dtype=np.int32)
+        pr = np.full((num_shards, emax), dg.num_labels, dtype=np.int32)
+        ob = np.zeros((num_shards, emax), dtype=np.int32)
+        for k in range(num_shards):
+            sel = owner == k
+            cnt = int(sel.sum())
+            sl[k, :cnt] = subj[sel] - k * Vl
+            pr[k, :cnt] = pred[sel]
+            ob[k, :cnt] = obj[sel]
+        return cls(
+            subj_local=sl, pred=pr, obj=ob,
+            nodes_per_shard=Vl, num_shards=num_shards,
+            num_nodes_padded=Vp, num_labels=dg.num_labels,
+        )
+
+
+def make_superstep(mesh: Mesh, data_axes: Tuple[str, ...], S: int):
+    """Build the jittable sharded superstep.
+
+    Args (sharded):  frontier/visited [V_pad, S] rows over data_axes;
+    edge arrays [shards, E_max] over data_axes (leading dim);
+    B [L+1, S], PRED [S, S] replicated.
+    Returns (new_frontier, new_visited).
+    """
+    axes = data_axes
+
+    def local_step(frontier_l, visited_l, subj_l, pred_l, obj_l, B, PRED):
+        # shard_map gives leading dims of size 1 for the edge arrays
+        subj_l, pred_l, obj_l = subj_l[0], pred_l[0], obj_l[0]
+        # the only collective: assemble the full frontier
+        frontier = frontier_l
+        for ax in reversed(axes):
+            frontier = jax.lax.all_gather(frontier, ax, tiled=True)
+        X = frontier[obj_l] * B[pred_l]                       # [E, S]
+        Y = (X.astype(jnp.int32) @ PRED.astype(jnp.int32)) > 0
+        scat = jax.ops.segment_max(
+            Y.astype(jnp.int8), subj_l, num_segments=frontier_l.shape[0]
+        )
+        scat = jnp.maximum(scat, 0)
+        new = jnp.logical_and(scat > 0, visited_l == 0).astype(jnp.int8)
+        return new, visited_l | new
+
+    spec_rows = P(axes, None)
+    spec_edges = P(axes, None)
+    rep = P()
+    step = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(spec_rows, spec_rows, spec_edges, spec_edges, spec_edges, rep, rep),
+        out_specs=(spec_rows, spec_rows),
+    )
+    return step
+
+
+def make_bfs(mesh: Mesh, data_axes: Tuple[str, ...], S: int, num_steps: int):
+    """Fixed-trip-count BFS (lowering-friendly: the dry-run lowers this);
+    real runs wrap the superstep in a while_loop on any(frontier)."""
+    step = make_superstep(mesh, data_axes, S)
+
+    @jax.jit
+    def run(frontier, visited, subj, pred, obj, B, PRED):
+        def body(_, state):
+            f, v = state
+            return step(f, v, subj, pred, obj, B, PRED)
+
+        f, v = jax.lax.fori_loop(0, num_steps, body, (frontier, visited))
+        return f, v
+
+    return run
+
+
+class DistributedRPQ:
+    """Convenience driver: run a multi-source backward BFS on a mesh."""
+
+    def __init__(self, dg: DenseGraph, mesh: Mesh, data_axes=("data",)):
+        self.dg = dg
+        self.mesh = mesh
+        self.data_axes = data_axes
+        shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        self.sg = ShardedGraph.from_dense(dg, shards)
+
+    def run(self, g: Glushkov, start_objs, max_steps: Optional[int] = None):
+        dg, sg = self.dg, self.sg
+        S = g.m + 1
+        B, PRED, _ = _plane_tables(g, dg.num_labels)
+        B = jnp.concatenate([B, jnp.zeros((1, S), jnp.int8)])  # padding label
+        Vp = sg.num_nodes_padded
+        D0 = g.F & ~1
+        frow = np.array([(D0 >> i) & 1 for i in range(S)], dtype=np.int8)
+        planes = np.zeros((Vp, S), dtype=np.int8)
+        planes[np.asarray(start_objs)] = frow
+
+        steps = max_steps if max_steps is not None else Vp * S + 1
+        spec_rows = NamedSharding(self.mesh, P(self.data_axes, None))
+        spec_edges = NamedSharding(self.mesh, P(self.data_axes, None))
+        rep = NamedSharding(self.mesh, P())
+        put = lambda x, s: jax.device_put(jnp.asarray(x), s)
+        frontier = put(planes, spec_rows)
+        visited = put(planes, spec_rows)
+        subj = put(sg.subj_local, spec_edges)
+        pred = put(sg.pred, spec_edges)
+        obj = put(sg.obj, spec_edges)
+        Bd = put(B, rep)
+        Pd = put(PRED, rep)
+
+        step = make_superstep(self.mesh, self.data_axes, S)
+
+        @jax.jit
+        def run_all(frontier, visited, subj, pred, obj, B, PRED):
+            def cond(state):
+                f, v, it = state
+                return jnp.logical_and(jnp.any(f > 0), it < steps)
+
+            def body(state):
+                f, v, it = state
+                f2, v2 = step(f, v, subj, pred, obj, B, PRED)
+                return f2, v2, it + 1
+
+            f, v, it = jax.lax.while_loop(
+                cond, body, (frontier, visited, jnp.int32(0))
+            )
+            return v, it
+
+        visited, iters = run_all(frontier, visited, subj, pred, obj, Bd, Pd)
+        return np.asarray(visited)[: dg.num_nodes], int(iters)

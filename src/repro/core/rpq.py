@@ -1,0 +1,275 @@
+"""Paper-faithful 2RPQ evaluation on the ring (Sec. 4).
+
+Backward traversal of the query-induced product subgraph G'_E: each BFS
+step starts at an L_p object range with a set D of active NFA states and
+
+  part 1 (Sec. 4.1): enumerates the distinct predicates in the range via
+     the L_p wavelet tree, pruning subtree v when D & B[v] == 0
+     (Fact 1 confines the symbol filter to B);
+  part 2 (Sec. 4.2): for each predicate, backward-search maps to an L_s
+     range; the L_s wavelet tree enumerates distinct subjects, pruning
+     with visited-state masks; D steps to T'[D & B[p]] *once per
+     predicate* (Fact 1 again — same D for every subject in the range);
+  part 3 (Sec. 4.3): each new subject s maps back to the object range
+     L_p[C_o[s] : C_o[s+1]) and is enqueued.
+
+A subject is reported when the initial NFA state activates.  Visited-mask
+soundness note: the paper stores at every internal L_s node v a mask D[v]
+(the intersection of leaf masks below) and updates it with D[v] |= D on
+every descent.  When the query interval covers v only *partially* that
+update can inflate D[v] above the true intersection and over-prune a
+later traversal, so we update internal masks only when the interval spans
+the whole node (leaf masks, which carry the actual Theorem-4.1 work
+bound, are always exact).  ``paper_dv=True`` restores the literal rule
+for comparison.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+import numpy as np
+
+from . import regex as rx
+from .glushkov import Glushkov
+from .ring import Ring
+
+
+@dataclass
+class QueryStats:
+    """Work counters used by the Theorem-4.1 complexity benchmark."""
+
+    node_state_activations: int = 0   # |new (v, q) pairs| == |G'_E| nodes touched
+    bfs_steps: int = 0
+    wt_nodes_visited: int = 0
+    predicates_enumerated: int = 0
+    subjects_enumerated: int = 0
+    results: int = 0
+
+
+class RingRPQ:
+    """2RPQ engine over a :class:`Ring` (the paper's algorithm)."""
+
+    def __init__(self, ring: Ring, paper_dv: bool = False):
+        self.ring = ring
+        self.paper_dv = paper_dv
+
+    # -- public API ----------------------------------------------------------
+    def eval(
+        self,
+        expr: str,
+        subject: Optional[int] = None,
+        obj: Optional[int] = None,
+        limit: Optional[int] = None,
+        stats: Optional[QueryStats] = None,
+        deadline_s: Optional[float] = None,
+    ) -> Set[Tuple[int, int]]:
+        """Evaluate the 2RPQ (subject, expr, obj); ``None`` = variable.
+
+        Returns the set of (s, o) node-id pairs (Sec. 3.1 semantics; for
+        fixed endpoints the pair is still reported if a path exists).
+        ``deadline_s``: per-query timeout (the paper's experimental setup
+        uses 60 s) — raises TimeoutError.
+        """
+        ast = rx.parse(expr)
+        return self.eval_ast(ast, subject, obj, limit, stats, deadline_s)
+
+    def eval_ast(self, ast, subject=None, obj=None, limit=None, stats=None,
+                 deadline_s=None):
+        import time as _time
+        self._deadline = (_time.time() + deadline_s) if deadline_s else None
+        if stats is None:
+            stats = QueryStats()
+        V = self.ring.num_nodes
+        out: Set[Tuple[int, int]] = set()
+        null = rx.nullable(ast)
+
+        if subject is None and obj is None:
+            # (x, E, y) — Sec. 4.4 two-phase strategy
+            if null:
+                out.update((v, v) for v in range(V))
+            # phase 1: from the full L_p range, find subjects reaching
+            # *some* object...
+            g_bwd = self._automaton(ast)
+            sources = self._traverse(
+                g_bwd, start_obj=None, stats=stats, collect="subjects"
+            )
+            # phase 2: from each such subject, run (s, E, y)
+            g_fwd = self._automaton(rx.reverse(ast))
+            for s in sorted(sources):
+                objs = self._traverse(
+                    g_fwd, start_obj=s, stats=stats, collect="subjects"
+                )
+                out.update((s, o) for o in objs)
+                if limit is not None and len(out) >= limit:
+                    return set(list(out)[:limit])
+        elif subject is None:
+            # (x, E, o): backward from o
+            if null:
+                out.add((obj, obj))
+            g_bwd = self._automaton(ast)
+            srcs = self._traverse(g_bwd, start_obj=obj, stats=stats,
+                                  collect="subjects", limit=limit)
+            out.update((s, obj) for s in srcs)
+        elif obj is None:
+            # (s, E, y) == (y, ^E, s) backward from s
+            if null:
+                out.add((subject, subject))
+            g_fwd = self._automaton(rx.reverse(ast))
+            objs = self._traverse(g_fwd, start_obj=subject, stats=stats,
+                                  collect="subjects", limit=limit)
+            out.update((subject, o) for o in objs)
+        else:
+            # (s, E, o) both fixed: pick the cheaper direction (Sec. 5:
+            # "start from the end whose predicate has the smallest
+            # cardinality" — the C_p array gives cardinalities in O(1)),
+            # early-exit on the target
+            if null and subject == obj:
+                out.add((subject, obj))
+            else:
+                g_bwd = self._automaton(ast)
+                g_fwd = self._automaton(rx.reverse(ast))
+                if self._start_cost(g_bwd) <= self._start_cost(g_fwd):
+                    g, start, tgt = g_bwd, obj, subject
+                else:
+                    g, start, tgt = g_fwd, subject, obj
+                found = self._traverse(g, start_obj=start, stats=stats,
+                                       collect="subjects", target=tgt)
+                if tgt in found:
+                    out.add((subject, obj))
+        stats.results = len(out)
+        if limit is not None and len(out) > limit:
+            out = set(list(out)[:limit])
+        return out
+
+    # -- internals -------------------------------------------------------------
+    def _start_cost(self, g: Glushkov) -> int:
+        """Sum of cardinalities of the predicates adjacent to the final
+        states — the edges the *first* backward step can touch (Sec. 5
+        planning heuristic; C_p lookups are O(1))."""
+        D0 = g.F & ~1
+        total = 0
+        for p, mask in g.B.items():
+            if mask & D0 and 0 <= p < self.ring.num_preds_completed:
+                total += self.ring.pred_cardinality(p)
+        return total
+
+    def _automaton(self, ast) -> Glushkov:
+        ring = self.ring
+        P = ring.num_preds
+
+        def resolve(lit: rx.Lit) -> int:
+            if ring.graph.pred_names is not None and not lit.name.isdigit():
+                base = ring.graph.pred_of(lit.name, False)
+            else:
+                base = int(lit.name)
+            if lit.inverse:
+                base = base + P if base < P else base - P
+            return base
+
+        return Glushkov.from_ast(ast, resolve)
+
+    def _build_Bv(self, g: Glushkov) -> Dict[Tuple[int, int], int]:
+        """Sparse B[v] masks for the L_p wavelet-tree nodes (Sec. 4.1):
+        B[v] = OR of B[p] for query predicates p below v.  Lazy: only
+        ancestors of the O(m) query predicates are materialized."""
+        levels = self.ring.wt_p.levels
+        Bv: Dict[Tuple[int, int], int] = {}
+        for p, mask in g.B.items():
+            if not (0 <= p < self.ring.num_preds_completed):
+                continue
+            for l in range(levels + 1):
+                key = (l, p >> (levels - l))
+                Bv[key] = Bv.get(key, 0) | mask
+        return Bv
+
+    def _traverse(
+        self,
+        g: Glushkov,
+        start_obj: Optional[int],
+        stats: QueryStats,
+        collect: str = "subjects",
+        target: Optional[int] = None,
+        limit: Optional[int] = None,
+    ) -> Set[int]:
+        """Backward BFS (Secs. 4.1–4.3).  ``start_obj=None`` starts from the
+        full L_p range (Sec. 4.4).  Returns reported subjects."""
+        ring = self.ring
+        Bv = self._build_Bv(g)
+        wt_p, wt_s = ring.wt_p, ring.wt_s
+        s_levels = wt_s.levels
+        INIT = g.initial
+
+        Ds: Dict[int, int] = {}           # leaf visited masks  D[s]
+        Dv: Dict[Tuple[int, int], int] = {}  # internal L_s masks D[v]
+        reported: Set[int] = set()
+
+        D0 = g.F & ~1  # state 0 never has incoming edges; strip eps bit
+        if D0 == 0:
+            return reported
+        queue: deque = deque()
+        if start_obj is None:
+            queue.append((ring.full_range(), D0))
+        else:
+            Ds[start_obj] = D0
+            queue.append((ring.object_range(start_obj), D0))
+
+        import time as _time
+        deadline = getattr(self, "_deadline", None)
+        while queue:
+            (b, e), D = queue.popleft()
+            if e <= b:
+                continue
+            stats.bfs_steps += 1
+            if deadline is not None and stats.bfs_steps % 64 == 0 \
+                    and _time.time() > deadline:
+                raise TimeoutError("query deadline exceeded")
+
+            # ---- part 1: distinct predicates with D & B[p] != 0 ----
+            def prune_p(l, prefix, covered, D=D):
+                stats.wt_nodes_visited += 1
+                return (D & Bv.get((l, prefix), 0)) == 0
+
+            for p, rb, re_ in wt_p.range_distinct(b, e, prune=prune_p):
+                stats.predicates_enumerated += 1
+                Dstep = g.Tp(D & g.B.get(p, 0))
+                if Dstep == 0:
+                    continue
+                sb = int(ring.C_p[p]) + rb
+                se = int(ring.C_p[p]) + re_
+                if se <= sb:
+                    continue
+
+                # ---- part 2: distinct unvisited subjects ----
+                def prune_s(l, prefix, covered, Dstep=Dstep):
+                    stats.wt_nodes_visited += 1
+                    if l == s_levels:
+                        return False  # leaves handled on yield
+                    key = (l, prefix)
+                    dv = Dv.get(key, 0)
+                    if Dstep & ~dv == 0:
+                        return True
+                    if covered or self.paper_dv:
+                        # sound update: only when the interval spans the whole
+                        # node does every present leaf below receive Dstep
+                        Dv[key] = dv | Dstep
+                    return False
+
+                for s, _srb, _sre in wt_s.range_distinct(sb, se, prune=prune_s):
+                    stats.subjects_enumerated += 1
+                    old = Ds.get(s, 0)
+                    Dnew = Dstep & ~old
+                    if Dnew == 0:
+                        continue
+                    Ds[s] = old | Dnew
+                    stats.node_state_activations += bin(Dnew).count("1")
+                    if Dnew & INIT:
+                        reported.add(s)
+                        if target is not None and s == target:
+                            return reported
+                        if limit is not None and len(reported) >= limit:
+                            return reported
+                    # ---- part 3: subject becomes the next object range ----
+                    queue.append((ring.object_range(s), Dnew))
+        return reported

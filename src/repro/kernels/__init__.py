@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the paper's hot loops (ops.py = public API)."""

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: bit-parallel Glushkov backward step over a node tile.
+
+Computes, for a tile of already-label-masked state words X (Fact 1:
+X = D & B[p] happens upstream), the reverse transition
+
+    Y[t] = T'[X[t]] = OR_{j : bit j set in X[t]}  PRED[j]
+
+where PRED[j] is the packed predecessor mask of NFA state j (paper
+Eq. 2).  This is a (m+1)x(m+1) bit-matrix times a packed bit-vector,
+batched over the tile — the paper's word-RAM trick mapped onto VPU lanes.
+
+Layout: node axis is minor (lanes), packed-word axis W is major, so a
+block is [W, TILE_N] uint32 and every op is a full-lane vector op.
+The S-step unrolled loop reads one scalar PRED word per (j, w) — those
+live in VMEM and are broadcast against the lane vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512  # nodes per block; multiple of 128 lanes
+
+
+def _kernel(S: int, W: int, x_ref, bwd_ref, y_ref):
+    x = x_ref[...]  # [W, TILE_N] uint32
+    y = jnp.zeros_like(x)
+    for j in range(S):
+        w, b = divmod(j, 32)
+        bit = (x[w, :] >> jnp.uint32(b)) & jnp.uint32(1)      # [TILE_N]
+        lane_mask = jnp.where(bit != 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        rows = []
+        for wo in range(W):
+            rows.append(y[wo, :] | (lane_mask & bwd_ref[j, wo]))
+        y = jnp.stack(rows, axis=0)
+    y_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nfa_step(X: jnp.ndarray, bwd: jnp.ndarray, interpret: bool = True):
+    """X: [N, W] uint32 masked state words; bwd: [S, W] uint32 packed
+    predecessor masks.  Returns Y: [N, W] uint32 = T'[X]."""
+    N, W = X.shape
+    S = bwd.shape[0]
+    n_pad = (TILE_N - N % TILE_N) % TILE_N
+    xt = jnp.pad(X, ((0, n_pad), (0, 0))).T  # [W, N_pad]
+    n_tiles = xt.shape[1] // TILE_N
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, S, W),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((W, TILE_N), lambda i: (0, i)),
+            pl.BlockSpec((S, W), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((W, TILE_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((W, xt.shape[1]), jnp.uint32),
+        interpret=interpret,
+    )(xt, bwd)
+    return out.T[:N]

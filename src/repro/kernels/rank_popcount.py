@@ -1,0 +1,84 @@
+"""Pallas TPU kernels for bitvector rank (wavelet-tree hot path).
+
+Two pieces (DESIGN.md §2):
+
+  * ``superblock_popcounts`` — index-build kernel: per-512-bit-superblock
+    population counts over the packed bitvector (the rank directory is
+    their prefix sum, done outside — a tiny cumsum).
+  * ``rank_window`` — query kernel: given pre-gathered 8-word superblock
+    windows and per-word masks (full / partial / zero, computed from the
+    query offsets), reduces masked popcounts.  The dynamic HBM gather
+    stays in XLA where it belongs; the bit-twiddling is fused here.
+
+Together they realize  rank1(i) = SB[i>>9] + popcnt(window & mask)  —
+Sec. 3.5's O(1) rank — in batched form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SB_WORDS = 16  # 16 x 32-bit words = 512-bit superblocks
+TILE_SB = 64   # superblocks per block -> 1024 words per block
+TILE_Q = 512   # queries per block
+
+
+def _sb_kernel(words_ref, out_ref):
+    w = words_ref[...]  # [TILE_SB, SB_WORDS] uint32
+    pc = jax.lax.population_count(w)
+    out_ref[...] = jnp.sum(pc.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def superblock_popcounts(words: jnp.ndarray, interpret: bool = True):
+    """words: [NW] uint32 (NW % SB_WORDS == 0).  Returns [NW/SB_WORDS] int32
+    per-superblock popcounts."""
+    nsb = words.shape[0] // SB_WORDS
+    pad = (TILE_SB - nsb % TILE_SB) % TILE_SB
+    w2 = jnp.pad(words, (0, pad * SB_WORDS)).reshape(-1, SB_WORDS)
+    out = pl.pallas_call(
+        _sb_kernel,
+        grid=(w2.shape[0] // TILE_SB,),
+        in_specs=[pl.BlockSpec((TILE_SB, SB_WORDS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_SB, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w2.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(w2)
+    return out[:nsb, 0]
+
+
+def _rank_kernel(win_ref, mask_ref, base_ref, out_ref):
+    w = win_ref[...]   # [TILE_Q, SB_WORDS] uint32
+    m = mask_ref[...]  # [TILE_Q, SB_WORDS] uint32
+    pc = jax.lax.population_count(w & m).astype(jnp.int32)
+    out_ref[...] = base_ref[...] + jnp.sum(pc, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rank_window(
+    windows: jnp.ndarray, masks: jnp.ndarray, bases: jnp.ndarray,
+    interpret: bool = True,
+):
+    """windows, masks: [Q, SB_WORDS] uint32; bases: [Q] int32 superblock
+    prefix counts.  Returns rank1 values [Q] int32."""
+    Q = windows.shape[0]
+    pad = (TILE_Q - Q % TILE_Q) % TILE_Q
+    w2 = jnp.pad(windows, ((0, pad), (0, 0)))
+    m2 = jnp.pad(masks, ((0, pad), (0, 0)))
+    b2 = jnp.pad(bases, (0, pad)).reshape(-1, 1)
+    out = pl.pallas_call(
+        _rank_kernel,
+        grid=(w2.shape[0] // TILE_Q,),
+        in_specs=[
+            pl.BlockSpec((TILE_Q, SB_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_Q, SB_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_Q, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_Q, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w2.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(w2, m2, b2)
+    return out[:Q, 0]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose ground truth)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def nfa_step_ref(X: jnp.ndarray, bwd: jnp.ndarray) -> jnp.ndarray:
+    """X: [N, W] uint32; bwd: [S, W] uint32.  Y[n] = OR_{j in X[n]} bwd[j]."""
+    N, W = X.shape
+    S = bwd.shape[0]
+    Y = jnp.zeros((N, W), dtype=jnp.uint32)
+    for j in range(S):
+        w, b = divmod(j, 32)
+        bit = (X[:, w] >> jnp.uint32(b)) & jnp.uint32(1)
+        mask = jnp.where(bit != 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        Y = Y | (mask[:, None] & bwd[j][None, :])
+    return Y
+
+
+def superblock_popcounts_ref(words: jnp.ndarray, sb_words: int = 16) -> jnp.ndarray:
+    pc = jax.lax.population_count(words).astype(jnp.int32)
+    return pc.reshape(-1, sb_words).sum(axis=1)
+
+
+def rank_window_ref(windows, masks, bases) -> jnp.ndarray:
+    pc = jax.lax.population_count(windows & masks).astype(jnp.int32)
+    return bases + pc.sum(axis=1)
+
+
+def segmented_or_scan_ref(vals: jnp.ndarray, flags: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive segmented OR-scan via lax.associative_scan (global — no
+    tile boundaries, so it doubles as the oracle for the stitched op)."""
+
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        keep = fb != 0
+        lane = jnp.where(keep, jnp.uint32(0), jnp.uint32(0xFFFFFFFF))
+        return fa | fb, vb | (va & lane[:, None])
+
+    f, v = jax.lax.associative_scan(
+        combine, (flags.astype(jnp.int32), vals)
+    )
+    return v
+
+
+def segment_or_ref(vals: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int):
+    """Scatter-OR oracle via per-bit segment_max."""
+    out = jnp.zeros((num_segments, vals.shape[1]), dtype=jnp.uint32)
+    for b in range(32):
+        bit = (vals >> jnp.uint32(b)) & jnp.uint32(1)
+        mx = jax.ops.segment_max(
+            bit.astype(jnp.int32), seg_ids, num_segments=num_segments
+        )
+        mx = jnp.maximum(mx, 0).astype(jnp.uint32)
+        out = out | (mx << jnp.uint32(b))
+    return out

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: segmented bitwise-OR scan (frontier merge).
+
+The dense engine's scatter-OR — ``new[v] = OR of per-edge contributions
+with subj[e] == v`` — becomes, with edges pre-sorted by destination, a
+*segmented inclusive OR-scan* followed by picking each segment's last
+row.  TPUs have no atomic scatter; the scan is the idiomatic mapping.
+
+In-kernel: Hillis–Steele over the tile with the segmented-scan operator
+    (f2, v2) ∘ (f1, v1) = (f1 | f2,  v2 if f2 else v1 | v2)
+on packed uint32 rows.  Cross-tile carries are stitched by ``ops.py``
+with a tiny per-tile pass (carry = last row; a row receives the carry
+iff no segment boundary precedes it inside its tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_E = 1024  # rows per block
+
+
+def _kernel(W: int, vals_ref, flags_ref, out_ref):
+    v = vals_ref[...]    # [W, TILE_E] uint32
+    f = flags_ref[...]   # [1, TILE_E] int32 (1 = segment start)
+    f = f[0, :]
+    d = 1
+    while d < TILE_E:
+        # shift right by d along the row axis
+        vs = jnp.pad(v, ((0, 0), (d, 0)))[:, :TILE_E]
+        fs = jnp.pad(f, (d, 0))[:TILE_E]
+        keep = (f == 0)  # rows whose segment continues from the left
+        lane = jnp.where(keep, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        v = v | (vs & lane[None, :])
+        f = f | jnp.where(keep, fs, f)
+        d *= 2
+    out_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segmented_or_scan(vals: jnp.ndarray, flags: jnp.ndarray, interpret: bool = True):
+    """vals: [E, W] uint32; flags: [E] int32 (1 at segment starts; flags[0]
+    must be 1).  Returns the *within-tile* inclusive segmented OR-scan;
+    cross-tile stitching happens in ops.segment_or."""
+    E, W = vals.shape
+    pad = (TILE_E - E % TILE_E) % TILE_E
+    v2 = jnp.pad(vals, ((0, pad), (0, 0))).T          # [W, E_pad]
+    # padded rows start their own segments so they never propagate
+    f2 = jnp.pad(flags, (0, pad), constant_values=1).reshape(1, -1)
+    n_tiles = v2.shape[1] // TILE_E
+    out = pl.pallas_call(
+        functools.partial(_kernel, W),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((W, TILE_E), lambda i: (0, i)),
+            pl.BlockSpec((1, TILE_E), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((W, TILE_E), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((W, v2.shape[1]), jnp.uint32),
+        interpret=interpret,
+    )(v2, f2)
+    return out.T[:E]

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build the production
+mesh, lower the appropriate step function against ShapeDtypeStruct
+stand-ins (zero allocation), ``.compile()`` it, and record
+memory_analysis / cost_analysis / the collective schedule into a JSON
+artifact under artifacts/dryrun/.  §Roofline reads these artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
+from ..configs.ring_rpq import CONFIG as RPQ_CONFIG
+from ..models import api
+from ..sharding import data_axes, make_rules, sanitize_spec_tree, spec as _spec
+from ..train import optim
+from ..train import step as tstep
+from .hlo_analysis import collective_bytes
+from .mesh import make_production_mesh
+
+KEY_STRUCT = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _shardings(mesh, spec_tree, struct_tree):
+    """NamedShardings, sanitized against the actual array shapes (inputs
+    must shard evenly)."""
+    spec_tree = sanitize_spec_tree(spec_tree, struct_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        state = jax.eval_shape(lambda k: tstep.init_state(cfg, k), KEY_STRUCT)
+        return {"state": state, "batch": api.batch_struct(cfg, shape)}
+    if shape.kind == "prefill":
+        params = jax.eval_shape(lambda k: api.init_params(cfg, k), KEY_STRUCT)
+        params = jax.tree.map(
+            lambda st: jax.ShapeDtypeStruct(st.shape, jnp.bfloat16)
+            if st.dtype == jnp.float32 else st, params)
+        return {"params": params, "batch": api.batch_struct(cfg, shape)}
+    # decode: one new token against a seq_len cache; serving weights bf16
+    params = jax.eval_shape(lambda k: api.init_params(cfg, k), KEY_STRUCT)
+    params = jax.tree.map(
+        lambda st: jax.ShapeDtypeStruct(st.shape, jnp.bfloat16)
+        if st.dtype == jnp.float32 else st, params)
+    cache = api.cache_struct(cfg, shape.global_batch, shape.seq_len + 8)
+    toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return {"params": params, "cache": cache, "tokens": toks}
+
+
+def lower_cell(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    small = shape.global_batch < _dp_size(mesh)
+    rules = make_rules(mesh, cfg, small_batch=small)
+    specs = input_specs(arch, shape_name)
+    if shape.kind == "train":
+        fn = tstep.make_train_step(cfg, optim.AdamWConfig(), mesh,
+                                   small_batch=small)
+        in_sh = (_shardings(mesh, tstep.state_specs(cfg, rules), specs["state"]),
+                 _shardings(mesh, api.batch_specs(cfg, rules), specs["batch"]))
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0,))
+        return jitted.lower(specs["state"], specs["batch"])
+    serve_rules = make_rules(mesh, cfg, small_batch=small, serving=True)
+    if shape.kind == "prefill":
+        fn = tstep.make_prefill_step(cfg, max_len=shape.seq_len + 8, mesh=mesh,
+                                     small_batch=small, serving=True)
+        in_sh = (_shardings(mesh, api.param_specs(cfg, serve_rules),
+                            specs["params"]),
+                 _shardings(mesh, api.batch_specs(cfg, serve_rules),
+                            specs["batch"]))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        return jitted.lower(specs["params"], specs["batch"])
+    fn = tstep.make_serve_step(cfg, mesh, small_batch=small, serving=True)
+    in_sh = (_shardings(mesh, api.param_specs(cfg, serve_rules),
+                        specs["params"]),
+             _shardings(mesh, api.cache_specs(cfg, serve_rules),
+                        specs["cache"]),
+             NamedSharding(mesh, P(None, None) if small
+                           else _spec(serve_rules, "batch", None)))
+    jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(1,))
+    return jitted.lower(specs["params"], specs["cache"], specs["tokens"])
+
+
+def lower_rpq(mesh):
+    """The paper's own workload: the distributed BFS superstep (fixed
+    depth) on a Wikidata-class synthetic graph."""
+    from ..core.distributed import make_bfs
+    c = RPQ_CONFIG
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    shards = int(np.prod([mesh.shape[a] for a in daxes]))
+    Vl = c.num_nodes // shards
+    El = c.num_edges // shards
+    S = c.nfa_states
+    run = make_bfs(mesh, daxes, S, c.supersteps)
+    rows = NamedSharding(mesh, P(daxes, None))
+    edges = NamedSharding(mesh, P(daxes, None))
+    rep = NamedSharding(mesh, P())
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((Vl * shards, S), jnp.int8), sds((Vl * shards, S), jnp.int8),
+        sds((shards, El), jnp.int32), sds((shards, El), jnp.int32),
+        sds((shards, El), jnp.int32),
+        sds((c.num_labels + 1, S), jnp.int8), sds((S, S), jnp.int8),
+    )
+    jitted = jax.jit(
+        run.__wrapped__ if hasattr(run, "__wrapped__") else run,
+        in_shardings=(rows, rows, edges, edges, edges, rep, rep),
+    )
+    return jitted.lower(*args)
+
+
+def analyse(lowered, mesh) -> dict:
+    from .hlo_cost import estimate
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    est = estimate(hlo)
+    out = {
+        "compile_seconds": compile_s,
+        "num_devices": int(np.prod(list(mesh.shape.values()))),
+        "mesh": dict(mesh.shape),
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and not k.startswith("utilization")},
+        "memory_analysis": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", -1),
+            "output_size": getattr(mem, "output_size_in_bytes", -1),
+            "temp_size": getattr(mem, "temp_size_in_bytes", -1),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", -1),
+            "alias_size": getattr(mem, "alias_size_in_bytes", -1),
+        },
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_wire_bytes_per_device": coll.total_bytes,
+        },
+        # trip-count-aware estimates (launch/hlo_cost.py) — XLA's own
+        # cost_analysis counts while bodies once; these are the real ones
+        "est": {
+            "flops_per_device": est.flops,
+            "bytes_per_device": est.bytes,
+            "collective_wire_bytes_per_device": est.collective_wire_bytes,
+            "collective_bytes_by_kind": est.bytes_by_kind,
+            "while_trips": est.while_trips[:50],
+        },
+    }
+    return out
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir: Path, verbose=True):
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    path = out_dir / f"{tag}.json"
+    if path.exists():
+        if verbose:
+            print(f"[skip-cached] {tag}")
+        return json.loads(path.read_text())
+    cfg = get_config(arch) if arch != "ring-rpq" else None
+    if cfg is not None:
+        ok, why = shape_applicable(cfg, SHAPES[shape_name])
+        if not ok:
+            rec = {"arch": arch, "shape": shape_name, "skipped": why}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[skip] {tag}: {why}")
+            return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered = (lower_rpq(mesh) if arch == "ring-rpq"
+                   else lower_cell(arch, shape_name, mesh))
+        rec = analyse(lowered, mesh)
+        rec.update({"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                    "ok": True, "total_seconds": time.time() - t0})
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+        path.write_text(json.dumps(rec, indent=1))
+        return rec
+    path.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        ma = rec["memory_analysis"]
+        print(f"[ok] {tag}: compile {rec['compile_seconds']:.1f}s  "
+              f"flops/dev {rec['flops_per_device']:.3e}  "
+              f"args {ma['argument_size']/2**30:.2f}GiB  "
+              f"temp {ma['temp_size']/2**30:.2f}GiB  "
+              f"coll {rec['collectives']['total_wire_bytes_per_device']/2**20:.1f}MiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        archs = ALL_ARCHS + ["ring-rpq"]
+        shapes = list(SHAPES)
+        meshes = [False, True] if args.both_meshes else [args.multipod]
+        for mp in meshes:
+            for a in archs:
+                cells = shapes if a != "ring-rpq" else ["train_4k"]
+                for s in cells:
+                    run_cell(a, s, mp, out)
+    else:
+        assert args.arch and args.shape
+        rec = run_cell(args.arch, args.shape, args.multipod, out)
+        print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                         indent=1))
+
+
+if __name__ == "__main__":
+    main()

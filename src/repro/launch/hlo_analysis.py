@@ -1,0 +1,94 @@
+"""HLO-text analysis: collective-bytes extraction for the roofline.
+
+``compiled.cost_analysis()`` has FLOPs and memory bytes but no
+collective traffic; we parse the (SPMD-partitioned) HLO and sum, per
+collective kind, the bytes each op moves per participant, using the
+standard wire-traffic models:
+
+    all-reduce       2 * size * (n-1)/n
+    all-gather           size * (n-1)/n     (size = gathered output)
+    reduce-scatter       size * (n-1)/n     (size = scattered input)
+    all-to-all           size * (n-1)/n
+    collective-permute   size
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9\[\],{}]+))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device wire bytes by collective kind + op counts."""
+
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    ops: List[Tuple[str, int, int]] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats(defaultdict(float), defaultdict(int), [])
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        n = max(2, _group_size(line))
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2 * size * frac
+        elif kind == "collective-permute":
+            wire = size
+        else:
+            wire = size * frac
+        stats.bytes_by_kind[kind] += wire
+        stats.count_by_kind[kind] += 1
+        stats.ops.append((kind, size, n))
+    stats.bytes_by_kind = dict(stats.bytes_by_kind)
+    stats.count_by_kind = dict(stats.count_by_kind)
+    return stats

@@ -1,0 +1,308 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+lax.scan over 60 layers reports 1/60th of the real FLOPs (verified
+empirically; see EXPERIMENTS.md §Methodology).  This module re-derives
+compute/memory/collective costs by walking the post-optimization HLO
+call graph and multiplying while-loop bodies by their inferred trip
+counts.
+
+Approximations (documented):
+  * dot FLOPs = 2 * |out| * K (K = product of LHS contracting dims);
+  * elementwise/reduce FLOPs = |out| (1 flop/elem — transcendentals too);
+  * bytes: counted at top level of each computation — operands + result
+    for compute/fusion ops (fusion internals excluded: that's what fusion
+    means); gathers/dynamic-slices count 2*|out|+indices, DUS 2*|update|;
+  * while trip count = the largest integer constant compared against in
+    the condition computation (exact for lax.scan/fori_loop);
+  * conditionals take the max across branches.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([a-z][a-z0-9\-]*)\(")
+_CALLED_RE = re.compile(r"(?:to_apply|body|condition|true_computation|false_computation|branch_computations|calls|called_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "negate", "abs", "rsqrt", "sqrt", "and",
+    "or", "xor", "not", "select", "compare", "convert", "floor", "ceil",
+    "sign", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "popcnt", "clamp", "atan2", "remainder", "cosine", "sine", "logistic",
+    "round-nearest-afz", "cbrt", "expm1", "log1p", "is-finite",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(s: str) -> List[Tuple[str, int, int]]:
+    """[(dtype, elems, bytes)] for each shape literal in s."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n, n * _DTYPE_BYTES[dt]))
+    return out
+
+
+@dataclass
+class OpLine:
+    name: str
+    opcode: str
+    line: str
+    result_shape: str
+    operands: List[str] = field(default_factory=list)
+    called: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpLine] = field(default_factory=list)
+
+
+@dataclass
+class Module:
+    comps: Dict[str, Computation]
+    shape_of: Dict[str, str]      # op name -> result type string
+
+
+def parse_module(text: str) -> Module:
+    comps: Dict[str, Computation] = {}
+    shape_of: Dict[str, str] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and "{" in line:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, opcode = m.groups()
+        # operand names: inside the first top-level paren group
+        lp = line.find(opcode + "(")
+        operands: List[str] = []
+        if lp >= 0:
+            rp = line.find(")", lp)
+            args = line[lp + len(opcode) + 1 : rp if rp > 0 else None]
+            operands = re.findall(r"%([\w.\-]+)", args)
+        called = []
+        for cm in _CALLED_RE.finditer(line):
+            called += [c.strip().lstrip("%") for c in cm.group(1).split(",")]
+        op = OpLine(name, opcode, line, result_shape, operands, called)
+        cur.ops.append(op)
+        shape_of[name] = result_shape
+    return Module(comps, shape_of)
+
+
+def _first_shape(s: str):
+    """(elems, bytes) of the first shape literal in a type string."""
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        return n, n * _DTYPE_BYTES[dt]
+    return 0, 0
+
+
+def _all_shapes_bytes(s: str) -> int:
+    return sum(b for _, _, b in _shape_list(s))
+
+
+def _operand_shapes(op: OpLine, mod: "Module") -> List[str]:
+    return [mod.shape_of.get(o, "") for o in op.operands]
+
+
+def _dot_flops(op: OpLine, mod: "Module") -> float:
+    out_e, _ = _first_shape(op.result_shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs = _operand_shapes(op, mod)
+    lhs = lhs[0] if lhs else ""
+    sm = _SHAPE_RE.search(lhs)
+    if m and sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        K = 1
+        for ci in m.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                K *= dims[int(ci)]
+        return 2.0 * out_e * K
+    return 2.0 * out_e  # degenerate fallback
+
+
+def _op_costs(op: OpLine, mod: "Module") -> Tuple[float, float]:
+    """(flops, bytes) for a leaf op; operand shapes via the symbol table."""
+    out_e, out_b = _first_shape(op.result_shape)
+    opnd = _operand_shapes(op, mod)
+    opnd_b = sum(_all_shapes_bytes(s) for s in opnd)
+    oc = op.opcode
+    if oc in ("dot", "convolution"):
+        return _dot_flops(op, mod), out_b + opnd_b
+    if oc in ("gather", "dynamic-slice"):
+        idx_b = sum(_all_shapes_bytes(s) for s in opnd[1:])
+        return 0.0, 2 * out_b + idx_b
+    if oc == "dynamic-update-slice":
+        upd = _all_shapes_bytes(opnd[1]) if len(opnd) > 1 else out_b
+        return 0.0, 2 * upd + 64
+    if oc == "scatter":
+        upd = _all_shapes_bytes(opnd[-1]) if opnd else out_b
+        return float(out_e), 2 * upd + out_b
+    if oc in ("reduce", "reduce-window"):
+        in_e = _first_shape(opnd[0])[0] if opnd else out_e
+        return float(in_e), out_b + opnd_b
+    if oc in _ELEMWISE:
+        return float(out_e), out_b + opnd_b
+    if oc in ("copy", "copy-start", "copy-done", "transpose", "reshape",
+              "concatenate", "slice", "pad", "reverse", "sort"):
+        return 0.0, out_b + opnd_b
+    if oc in ("broadcast", "iota", "constant", "bitcast", "bitcast-convert",
+              "get-tuple-element", "tuple", "parameter", "after-all",
+              "partition-id", "replica-id"):
+        return 0.0, 0.0
+    return 0.0, 0.0
+
+
+def _fusion_flops(comp: Computation, mod: "Module", depth=0) -> float:
+    """FLOPs inside a fusion body (dots + elementwise), bytes excluded."""
+    if depth > 20:
+        return 0.0
+    total = 0.0
+    for op in comp.ops:
+        if op.opcode in ("fusion", "call"):
+            for c in op.called:
+                if c in mod.comps:
+                    total += _fusion_flops(mod.comps[c], mod, depth + 1)
+        else:
+            f, _ = _op_costs(op, mod)
+            total += f
+    return total
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "compare":
+            for m in _CONST_RE.finditer(op.line):
+                best = max(best, int(m.group(1)))
+    # also scan constants materialized separately in the condition
+    for op in cond.ops:
+        if op.opcode == "constant":
+            for m in _CONST_RE.finditer(op.line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+from .hlo_analysis import _group_size  # reuse replica-group parsing
+
+
+@dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    while_trips: List[Tuple[str, int]] = field(default_factory=list)
+
+
+def estimate(text: str, entry: Optional[str] = None) -> ModuleCosts:
+    mod = parse_module(text)
+    comps = mod.comps
+    if not comps:
+        return ModuleCosts()
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    costs = ModuleCosts(bytes_by_kind=defaultdict(float))
+
+    def walk(name: str, mult: float, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return
+        for op in comp.ops:
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                mt = _TRIP_RE.search(op.line)  # XLA's own analysis, exact
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    trips = _trip_count(comps[cond]) if cond in comps else 1
+                costs.while_trips.append((body or "?", trips))
+                if body:
+                    walk(body, mult * trips, depth + 1)
+            elif op.opcode == "conditional":
+                for c in op.called:
+                    walk(c, mult, depth + 1)
+            elif op.opcode == "fusion":
+                f = sum(_fusion_flops(comps[c], mod) for c in op.called
+                        if c in comps)
+                out_b = _all_shapes_bytes(op.result_shape)
+                opnd_bytes = [_all_shapes_bytes(mod.shape_of.get(o, ""))
+                              for o in op.operands]
+                if "dynamic-update-slice" in op.name or "scatter" in op.name:
+                    # in-place update fusions alias the big buffer: traffic
+                    # is the update slice r/w, not the whole operand — drop
+                    # operands matching the result size, bound the result by
+                    # twice the touched region
+                    opnd_b = sum(b for b in opnd_bytes if b != out_b)
+                    out_b = min(out_b, 2 * max(opnd_b, 1))
+                else:
+                    opnd_b = sum(opnd_bytes)
+                costs.flops += mult * f
+                costs.bytes += mult * (out_b + opnd_b)
+            elif op.opcode in ("call", "custom-call", "async-start"):
+                for c in op.called:
+                    walk(c, mult, depth + 1)
+            elif any(op.opcode == c or op.opcode == c + "-start"
+                     for c in _COLLECTIVES):
+                base = op.opcode.replace("-start", "")
+                size = _all_shapes_bytes(op.result_shape)
+                if op.opcode.endswith("-start"):
+                    # result of *-start is a tuple (operand, result) — halve
+                    size = size / 2
+                n = max(2, _group_size(op.line))
+                frac = (n - 1) / n
+                wire = (2 * size * frac if base == "all-reduce" else
+                        size if base == "collective-permute" else
+                        size * frac)
+                costs.collective_wire_bytes += mult * wire
+                costs.bytes_by_kind[base] += mult * wire
+                costs.bytes += mult * size
+            else:
+                f, b = _op_costs(op, mod)
+                costs.flops += mult * f
+                costs.bytes += mult * b
+
+    walk(entry, 1.0)
+    costs.bytes_by_kind = dict(costs.bytes_by_kind)
+    return costs

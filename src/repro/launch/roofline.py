@@ -1,0 +1,144 @@
+"""Roofline analysis (deliverable g) over the dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step, derived
+from the compiled artifact (TPU v5e targets):
+
+    compute    = HLO_FLOPs_per_device / 197e12     (bf16 peak per chip)
+    memory     = HLO_bytes_per_device / 819e9      (HBM bw per chip)
+    collective = wire_bytes_per_device / 50e9      (1 ICI link, conservative)
+
+plus MODEL_FLOPS (6·N·D train / 2·N·D forward, true unpadded config,
+active params for MoE) and the MODEL/HLO ratio that exposes
+padding/remat/dead-compute waste.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--art artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip (v5e)
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link (single-link, conservative)
+
+
+def model_flops_per_device(arch: str, shape_name: str, num_devices: int) -> float:
+    from ..configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    N = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * N * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * N * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * N * shape.global_batch
+    return total / num_devices
+
+
+def analyse_artifact(rec: dict) -> Optional[dict]:
+    if rec.get("skipped") or not rec.get("ok"):
+        return None
+    nd = rec["num_devices"]
+    est = rec.get("est")
+    if est:  # trip-count-aware HLO walk (hlo_cost.py) — the real numbers
+        flops = est["flops_per_device"]
+        bts = est["bytes_per_device"]
+        wire = est["collective_wire_bytes_per_device"]
+    else:    # raw XLA cost_analysis (counts loop bodies once — low)
+        flops = rec["flops_per_device"]
+        bts = rec["bytes_accessed_per_device"]
+        wire = rec["collectives"]["total_wire_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS
+    t_m = bts / HBM_BW
+    t_x = wire / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops_per_device(rec["arch"], rec["shape"], nd)
+    ratio = mf / flops if flops > 0 else float("nan")
+    # roofline fraction: useful model flops vs what the machine could do in
+    # the bound time (the score we hillclimb)
+    bound = max(t_c, t_m, t_x)
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else float("nan")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec.get("multi_pod") else "16x16",
+        "devices": nd,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_dev": mf, "hlo_flops_per_dev": flops,
+        "model_over_hlo": ratio, "roofline_fraction": frac,
+        "temp_bytes": rec["memory_analysis"]["temp_size"],
+        "arg_bytes": rec["memory_analysis"]["argument_size"],
+    }
+
+
+def suggest(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["model_over_hlo"] < 0.6:
+            return ("compute-bound with low MODEL/HLO ratio — cut padded-head/"
+                    "expert and remat recompute waste")
+        return "compute-bound near peak — increase arithmetic intensity won't help; done"
+    if d == "memory":
+        return ("memory-bound — raise arithmetic intensity (larger per-device "
+                "batch, bf16 cache/stores, fuse elementwise chains)")
+    return ("collective-bound — overlap or shrink traffic (reduce-scatter "
+            "instead of all-reduce+slice, bf16 grads, rematerialize instead "
+            "of gathering)")
+
+
+def load_rows(art_dir: str) -> List[dict]:
+    rows = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("arch") == "ring-rpq":
+            continue
+        row = analyse_artifact(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |\n|" + "---|" * 9 + "\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | {r['dominant']} | "
+            f"{r['model_over_hlo']:.3f} | {r['roofline_fraction']:.3f} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline")
+    args = ap.parse_args()
+    rows = load_rows(args.art)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "roofline.json").write_text(json.dumps(rows, indent=1))
+    md = to_markdown([r for r in rows if r["mesh"] == "16x16"])
+    (out / "roofline.md").write_text(md)
+    print(md)
+    worst = sorted((r for r in rows if r["mesh"] == "16x16"),
+                   key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']}: frac={r['roofline_fraction']:.3f} "
+              f"dom={r['dominant']} -> {suggest(r)}")
+    collb = [r for r in rows if r["dominant"] == "collective" and
+             r["mesh"] == "16x16"]
+    print(f"\ncollective-bound cells: {[(r['arch'], r['shape']) for r in collb]}")
+
+
+if __name__ == "__main__":
+    main()

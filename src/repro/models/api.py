@@ -1,0 +1,146 @@
+"""Family-dispatch model API: one uniform surface for the launcher,
+dry-run, trainer and server.
+
+  init_params / param_specs / loss_fn / prefill_fn / decode_fn /
+  init_cache / cache_specs / make_batch_specs
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..sharding import spec as _spec
+from .common import ShardCtx
+from .losses import softmax_xent
+from . import encdec as ed
+from . import transformer as tf
+
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return ed.init_params(cfg, key)
+    return tf.init_params(cfg, key)
+
+
+def param_specs(cfg: ModelConfig, rules):
+    if cfg.family == "encdec":
+        return ed.param_specs(cfg, rules)
+    return tf.param_specs(cfg, rules)
+
+
+# --------------------------------------------------------------------------
+# batches
+# --------------------------------------------------------------------------
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one training/prefill batch of this shape."""
+    B, T = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, T, d), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        Np = cfg.num_prefix_embeds
+        Tt = max(1, T - Np)
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((B, Np, d), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, Tt), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, Np + Tt), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, Np + Tt), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+
+
+def batch_specs(cfg: ModelConfig, rules):
+    s = functools.partial(_spec, rules)
+    if cfg.family == "encdec":
+        return {"frames": s("batch", None, None), "tokens": s("batch", None),
+                "labels": s("batch", None)}
+    if cfg.family == "vlm":
+        return {"patch_embeds": s("batch", None, None), "tokens": s("batch", None),
+                "labels": s("batch", None), "mask": s("batch", None)}
+    return {"tokens": s("batch", None), "labels": s("batch", None)}
+
+
+# --------------------------------------------------------------------------
+# loss / prefill / decode
+# --------------------------------------------------------------------------
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ShardCtx):
+    """Returns (loss, metrics)."""
+    if cfg.family == "encdec":
+        enc_out = ed.encode(params, batch["frames"], cfg, ctx)
+        logits, _ = ed.decode(params, batch["tokens"], enc_out, cfg, ctx)
+        loss, n = softmax_xent(logits, batch["labels"])
+        return loss, {"xent": loss, "tokens": n}
+    if cfg.family == "vlm":
+        logits, _, aux = tf.forward(params, cfg, ctx, tokens=batch["tokens"],
+                                    prefix_embeds=batch["patch_embeds"])
+        loss, n = softmax_xent(logits, batch["labels"], batch["mask"])
+        return loss, {"xent": loss, "tokens": n}
+    logits, _, aux = tf.forward(params, cfg, ctx, tokens=batch["tokens"])
+    loss, n = softmax_xent(logits, batch["labels"])
+    total = loss + (MOE_AUX_WEIGHT * aux if cfg.family == "moe" else 0.0)
+    return total, {"xent": loss, "tokens": n,
+                   **({"moe_aux": aux} if cfg.family == "moe" else {})}
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, ctx: ShardCtx, max_len: int):
+    """Run the full prompt, build the decode cache.  Returns (logits_last,
+    cache)."""
+    B = (batch["tokens"].shape[0] if "tokens" in batch else
+         batch["frames"].shape[0])
+    if cfg.family == "encdec":
+        enc_out = ed.encode(params, batch["frames"], cfg, ctx)
+        enc_kv = ed._enc_kv(params["dec_layers"], enc_out, cfg, ctx)
+        cache = ed.init_cache(cfg, B, max_len, enc_out.shape[1])
+        cache["enc_kv"] = enc_kv
+        logits, cache = ed.decode(params, batch["tokens"], None, cfg, ctx,
+                                  cache=cache)
+        return logits[:, -1], cache
+    cache = tf.init_cache(cfg, B, max_len)
+    logits, cache, _ = tf.forward(
+        params, cfg, ctx, tokens=batch.get("tokens"),
+        prefix_embeds=batch.get("patch_embeds"), cache=cache,
+    )
+    return logits[:, -1], cache
+
+
+def decode_fn(params, cache, tokens, cfg: ModelConfig, ctx: ShardCtx):
+    """One decode step: tokens [B, 1].  Returns (logits [B, V], cache)."""
+    if cfg.family == "encdec":
+        logits, cache = ed.decode(params, tokens, None, cfg, ctx, cache=cache)
+        return logits[:, -1], cache
+    logits, cache, _ = tf.forward(params, cfg, ctx, tokens=tokens, cache=cache)
+    return logits[:, -1], cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 1024):
+    if cfg.family == "encdec":
+        return ed.init_cache(cfg, batch, max_len, enc_len)
+    return tf.init_cache(cfg, batch, max_len)
+
+
+def cache_specs(cfg: ModelConfig, rules):
+    if cfg.family == "encdec":
+        return ed.cache_specs(cfg, rules)
+    return tf.cache_specs(cfg, rules)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 1024):
+    """ShapeDtypeStructs of the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, enc_len)
+    )

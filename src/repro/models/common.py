@@ -1,0 +1,65 @@
+"""Shared model utilities: shard context, norms, rope, inits."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding as shd
+
+
+@dataclass
+class ShardCtx:
+    """Carries (mesh, logical rules); ``ctx(x, 'batch', None, 'heads')``
+    applies a sharding constraint, or is a no-op when mesh is None."""
+
+    mesh: Optional[object] = None
+    rules: Optional[dict] = None
+
+    def __call__(self, x, *names):
+        if self.mesh is None:
+            return x
+        return shd.constrain(x, self.mesh, self.rules, *names)
+
+
+NO_SHARD = ShardCtx()
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    """Variance reduction in f32; the elementwise scale applies in the
+    compute dtype so cotangents stay bf16 — a full-f32 norm promotes the
+    *backward* residual stream (and its model-axis psums) to f32, doubling
+    the dominant collective (EXPERIMENTS.md §Perf-2)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * scale * (1.0 + w).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., T, H, Dh]; positions: [..., T].  Angles in f32, rotation in
+    the compute dtype (keeps [B,T,H,Dh]-sized tensors and their cotangents
+    bf16)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), dtype=jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def init_dense(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

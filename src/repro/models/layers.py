@@ -1,0 +1,388 @@
+"""Transformer building blocks: GQA attention (blockwise/flash, cached),
+SwiGLU MLP, GShard-style MoE.  Pure JAX; sharding via logical constraints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ShardCtx, NO_SHARD, apply_rope, init_dense, rms_norm, split_keys
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def init_attention(key, cfg):
+    d, H, K, Dh = (cfg.d_model, cfg.eff_num_heads, cfg.eff_num_kv_heads,
+                   cfg.head_dim)
+    ks = split_keys(key, 6)
+    p = {
+        "wq": init_dense(ks[0], (d, H, Dh), fan_in=d),
+        "wk": init_dense(ks[1], (d, K, Dh), fan_in=d),
+        "wv": init_dense(ks[2], (d, K, Dh), fan_in=d),
+        "wo": init_dense(ks[3], (H, Dh, d), fan_in=H * Dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,))
+        p["k_norm"] = jnp.zeros((Dh,))
+    return p
+
+
+def attention_specs(cfg, s):
+    """PartitionSpec tree matching init_attention (s = spec fn)."""
+    p = {
+        "wq": s("fsdp", "heads", None),
+        "wk": s("fsdp", "kv_heads", None),
+        "wv": s("fsdp", "kv_heads", None),
+        "wo": s("heads", None, "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = s(None)
+        p["k_norm"] = s(None)
+    return p
+
+
+def _online_softmax_chunk(q, k, v, mask, carry):
+    """One flash step: q [B,H,Tq,Dh], k/v [B,K,Tc,Dh] (grouped),
+    mask [B,1,Tq,Tc] additive.  carry = (m, l, acc)."""
+    m, l, acc = carry
+    B, H, Tq, Dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Tq, Dh)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(Dh) + mask[:, :, None, :, :]
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqt,bktd->bkgqd", p.astype(v.dtype), v).astype(jnp.float32)
+    acc_new = acc * alpha[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _chunk_mask(Tq, chunk, cidx, q_offset, causal, prefix_len, valid_total):
+    """Additive f32 mask [Tq, chunk] for kv chunk ``cidx``."""
+    q_pos = q_offset + jnp.arange(Tq)
+    k_pos = cidx * chunk + jnp.arange(chunk)
+    ok = k_pos[None, :] < valid_total
+    if causal:
+        vis = q_pos[:, None] >= k_pos[None, :]
+        if prefix_len:
+            vis = jnp.logical_or(vis, (k_pos < prefix_len)[None, :])
+        ok = jnp.logical_and(ok, vis)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _flash_fwd(q, k, v, causal, chunk, q_offset, prefix_len, kv_valid_len):
+    """Returns (out [B,Tq,H,Dh], lse [B,K,G,Tq])."""
+    B, Tq, H, Dh = q.shape
+    Tk, K = k.shape[1], k.shape[2]
+    nc = -(-Tk // chunk)
+    pad = nc * chunk - Tk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(B, nc, chunk, K, Dh).transpose(1, 0, 3, 2, 4)  # [nc,B,K,C,Dh]
+    vp = vp.reshape(B, nc, chunk, K, Dh).transpose(1, 0, 3, 2, 4)
+    qT = q.transpose(0, 2, 1, 3)  # [B,H,Tq,Dh]
+    valid_total = Tk if kv_valid_len is None else kv_valid_len
+
+    def step(carry, xs):
+        kc, vc, cidx = xs
+        mask = _chunk_mask(Tq, chunk, cidx, q_offset, causal, prefix_len,
+                           valid_total)
+        mask = jnp.broadcast_to(mask[None, None], (B, 1, Tq, chunk))
+        carry = _online_softmax_chunk(qT, kc, vc, mask, carry)
+        return carry, None
+
+    G = H // K
+    m0 = jnp.full((B, K, G, Tq), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((B, K, G, Tq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, K, G, Tq, Dh), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kp, vp, jnp.arange(nc)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = out.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_train(q, k, v, causal, chunk, q_offset, prefix_len):
+    return _flash_fwd(q, k, v, causal, chunk, q_offset, prefix_len, None)[0]
+
+
+def _flash_train_fwd(q, k, v, causal, chunk, q_offset, prefix_len):
+    out, lse = _flash_fwd(q, k, v, causal, chunk, q_offset, prefix_len, None)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_train_bwd(causal, chunk, q_offset, prefix_len, res, dout):
+    """Flash backward: recompute per-chunk probabilities from (q, k, lse);
+    only O(T) residuals are stored — this is the hillclimb-1 fix for the
+    4.3 GB/layer saved-probability buffers (EXPERIMENTS.md §Perf)."""
+    q, k, v, out, lse = res
+    B, Tq, H, Dh = q.shape
+    Tk, K = k.shape[1], k.shape[2]
+    G = H // K
+    nc = -(-Tk // chunk)
+    pad = nc * chunk - Tk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(B, nc, chunk, K, Dh).transpose(1, 0, 3, 2, 4)
+    vp = vp.reshape(B, nc, chunk, K, Dh).transpose(1, 0, 3, 2, 4)
+    qg = q.transpose(0, 2, 1, 3).reshape(B, K, G, Tq, Dh)      # [B,K,G,Tq,Dh]
+    dog = dout.transpose(0, 2, 1, 3).reshape(B, K, G, Tq, Dh)
+    og = out.transpose(0, 2, 1, 3).reshape(B, K, G, Tq, Dh)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+    scale = 1.0 / np.sqrt(Dh)
+
+    def step(dq_acc, xs):
+        kc, vc, cidx = xs
+        mask = _chunk_mask(Tq, chunk, cidx, q_offset, causal, prefix_len, Tk)
+        s = jnp.einsum("bkgqd,bktd->bkgqt", qg, kc).astype(jnp.float32)
+        s = s * scale + mask[None, None, None]
+        p = jnp.exp(s - lse[..., None])                         # [B,K,G,Tq,C]
+        dv_c = jnp.einsum("bkgqt,bkgqd->bktd", p.astype(dog.dtype), dog)
+        dp = jnp.einsum("bkgqd,bktd->bkgqt", dog, vc).astype(jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgqt,bktd->bkgqd",
+                                     ds.astype(kc.dtype), kc)
+        dk_c = jnp.einsum("bkgqt,bkgqd->bktd", ds.astype(qg.dtype), qg)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros_like(qg)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kp, vp, jnp.arange(nc)))
+    dq = dq.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3).astype(q.dtype)
+    # ys are [nc, B, K, chunk, Dh] -> [B, nc*chunk, K, Dh]
+    dk = dk_c.transpose(1, 0, 3, 2, 4).reshape(B, nc * chunk, K, Dh)
+    dk = dk[:, :Tk].astype(k.dtype)
+    dv = dv_c.transpose(1, 0, 3, 2, 4).reshape(B, nc * chunk, K, Dh)
+    dv = dv[:, :Tk].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_train.defvjp(_flash_train_fwd, _flash_train_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, chunk: int, q_offset=0,
+                    prefix_len: int = 0, kv_valid_len=None):
+    """Blockwise (flash) attention, pure JAX, memory-efficient backward.
+
+    q: [B, Tq, H, Dh]; k, v: [B, Tk, K, Dh] (GQA: H % K == 0).
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``prefix_len``: bidirectional prefix (prefix-LM / PaliGemma).
+    ``kv_valid_len``: mask out cache positions >= this (decode; the
+    decode path is not differentiated so it takes the plain fwd).
+    """
+    if kv_valid_len is None and isinstance(q_offset, int):
+        return _flash_train(q, k, v, causal, chunk, q_offset, prefix_len)
+    return _flash_fwd(q, k, v, causal, chunk, q_offset, prefix_len,
+                      kv_valid_len)[0]
+
+
+def attention_block(p, x, cfg, ctx: ShardCtx, positions, cache=None,
+                    prefix_len: int = 0, causal: bool = True):
+    """x: [B, T, d].  cache: None or dict(k, v: [B, S, K, Dh], len: [])
+    (decode: T == new tokens, usually 1).  Returns (out, new_cache)."""
+    B, T, d = x.shape
+    H, K, Dh = cfg.eff_num_heads, cfg.eff_num_kv_heads, cfg.head_dim
+    xc = x.astype(jnp.bfloat16)
+    q = jnp.einsum("btd,dhk->bthk", xc, p["wq"].astype(jnp.bfloat16))
+    k = jnp.einsum("btd,dhk->bthk", xc, p["wk"].astype(jnp.bfloat16))
+    v = jnp.einsum("btd,dhk->bthk", xc, p["wv"].astype(jnp.bfloat16))
+    q = ctx(q, "batch", None, "heads", None)
+    k = ctx(k, "batch", None, "kv_heads", None)
+    v = ctx(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        S = cache["k"].shape[1]
+        start = cache["len"]
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0)
+        )
+        new_cache = {"k": ck, "v": cv, "len": start + T}
+        if T == 1:
+            # decode fast path: scores are [B,H,S] — small even at 500k —
+            # and a single einsum shards cleanly however the cache is laid
+            # out (incl. sequence-sharded caches for long-context decode)
+            G = H // K
+            qg = q.reshape(B, K, G, Dh)
+            s = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32)
+            s = s / np.sqrt(Dh)
+            valid = jnp.arange(S)[None, None, None, :] < (start + T)
+            s = jnp.where(valid, s, -1e30)
+            pattn = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bkgs,bskd->bkgd", pattn.astype(cv.dtype), cv)
+            out = out.reshape(B, 1, H, Dh)
+        else:
+            out = flash_attention(
+                q, ck, cv, causal=causal, chunk=min(cfg.attn_chunk, S),
+                q_offset=start, prefix_len=prefix_len, kv_valid_len=start + T,
+            )
+    else:
+        out = flash_attention(
+            q, k, v, causal=causal, chunk=min(cfg.attn_chunk, T),
+            prefix_len=prefix_len,
+        )
+    out = ctx(out, "batch", None, "heads", None)
+    y = jnp.einsum("bthk,hkd->btd", out.astype(jnp.bfloat16),
+                   p["wo"].astype(jnp.bfloat16))
+    # constrain the block output sequence-parallel: GSPMD lowers the
+    # model-axis psum as reduce-scatter (half the wire bytes of
+    # all-reduce) and the residual add runs sharded (§Perf-2)
+    return ctx(y, "batch", "seq_sp", None), new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, d, f):
+    ks = split_keys(key, 3)
+    return {
+        "wg": init_dense(ks[0], (d, f), fan_in=d),
+        "wu": init_dense(ks[1], (d, f), fan_in=d),
+        "wd": init_dense(ks[2], (f, d), fan_in=f),
+    }
+
+
+def mlp_specs(s):
+    return {"wg": s("fsdp", "ffn"), "wu": s("fsdp", "ffn"), "wd": s("ffn", "fsdp")}
+
+
+def mlp_block(p, x, ctx: ShardCtx):
+    xc = x.astype(jnp.bfloat16)
+    g = jnp.einsum("btd,df->btf", xc, p["wg"].astype(jnp.bfloat16))
+    u = jnp.einsum("btd,df->btf", xc, p["wu"].astype(jnp.bfloat16))
+    h = jax.nn.silu(g) * u
+    h = ctx(h, "batch", None, "ffn")
+    y = jnp.einsum("btf,fd->btd", h, p["wd"].astype(jnp.bfloat16))
+    return ctx(y, "batch", "seq_sp", None)
+
+
+# --------------------------------------------------------------------------
+# MoE (GShard-style grouped dispatch; shared + routed experts)
+# --------------------------------------------------------------------------
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.expert_d_ff, cfg.eff_num_experts
+    ks = split_keys(key, 5)
+    p = {
+        "router": init_dense(ks[0], (d, E), fan_in=d),
+        "wg": init_dense(ks[1], (E, d, f), fan_in=d),
+        "wu": init_dense(ks[2], (E, d, f), fan_in=d),
+        "wd": init_dense(ks[3], (E, f, d), fan_in=f),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.num_shared_experts)
+    return p
+
+
+def moe_specs(cfg, s):
+    p = {
+        "router": s(None, None),
+        "wg": s("experts", "fsdp", None),
+        "wu": s("experts", "fsdp", None),
+        "wd": s("experts", None, "fsdp"),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_specs(s)
+    return p
+
+
+def _moe_router(p, xg, cfg):
+    E, k = cfg.eff_num_experts, cfg.top_k
+    logits = jnp.einsum("gd,de->ge", xg.astype(jnp.bfloat16),
+                        p["router"].astype(jnp.bfloat16)).astype(jnp.float32)
+    if E > cfg.num_experts:  # padded experts can never be routed to
+        pad_mask = jnp.arange(E) >= cfg.num_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return probs, top_p, top_e
+
+
+def moe_block_dropless(p, x, cfg, ctx: ShardCtx):
+    """Capacity-free MoE for decode (small token counts): every expert is
+    applied to every token, combined by the routing weights.  Exact (no
+    drops); the E-fold compute is irrelevant at decode where reading the
+    expert weights dominates anyway."""
+    B, T, d = x.shape
+    E, k = cfg.eff_num_experts, cfg.top_k
+    xt = x.reshape(B * T, d).astype(jnp.bfloat16)
+    probs, top_p, top_e = _moe_router(p, xt, cfg)
+    w = (jax.nn.one_hot(top_e, E, dtype=jnp.float32)
+         * top_p[..., None]).sum(axis=1)                        # [N, E]
+    h = jax.nn.silu(jnp.einsum("nd,edf->enf", xt, p["wg"].astype(jnp.bfloat16)))
+    h = h * jnp.einsum("nd,edf->enf", xt, p["wu"].astype(jnp.bfloat16))
+    out = jnp.einsum("enf,efd->end", h, p["wd"].astype(jnp.bfloat16))
+    y = jnp.einsum("end,ne->nd", out.astype(jnp.float32), w)
+    y = y.reshape(B, T, d)
+    if cfg.num_shared_experts:
+        y = y + mlp_block(p["shared"], x, ctx)
+    return y.astype(x.dtype), jnp.float32(0)
+
+
+def moe_block(p, x, cfg, ctx: ShardCtx, group_size: int = 0):
+    """x: [B, T, d].  Top-k routing with per-group expert capacity
+    C = g*k/E * capacity_factor (GShard); dropped tokens pass through the
+    residual only.  Groups have FIXED size (padded), so a token's
+    dispatch position never depends on how many tokens follow it —
+    prefill is prefix-stable.  Returns (out, aux_loss)."""
+    B, T, d = x.shape
+    E, k = cfg.eff_num_experts, cfg.top_k
+    xt = x.reshape(B * T, d)
+    N = B * T
+    g = group_size or cfg.moe_group_size
+    ngroups = -(-N // g)
+    padN = ngroups * g - N
+    xt = jnp.pad(xt, ((0, padN), (0, 0))).reshape(ngroups, g, d)
+    C = max(1, int(g * k / E * cfg.capacity_factor))
+
+    wg = p["wg"].astype(jnp.bfloat16)
+    wu = p["wu"].astype(jnp.bfloat16)
+    wd = p["wd"].astype(jnp.bfloat16)
+
+    def one_group(xg):
+        probs, top_p, top_e = _moe_router(p, xg, cfg)        # [g, k]
+        # position of each (token, slot) in its expert's queue
+        onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)   # [g, k, E]
+        pos = jnp.cumsum(onehot.reshape(g * k, E), axis=0).reshape(g, k, E) - 1
+        pos = (pos * onehot).sum(-1)                          # [g, k]
+        within = pos < C
+        # dispatch/combine tensors [g, E, C]
+        disp = jnp.zeros((g, E, C), dtype=jnp.bfloat16)
+        ge = jax.nn.one_hot(top_e, E, dtype=jnp.bfloat16)    # [g, k, E]
+        pc = jax.nn.one_hot(jnp.where(within, pos, C), C + 1,
+                            dtype=jnp.bfloat16)[..., :C]     # [g, k, C]
+        disp = jnp.einsum("ske,skc->sec", ge, pc)            # [g, E, C]
+        comb = jnp.einsum("ske,skc,sk->sec", ge, pc,
+                          top_p.astype(jnp.bfloat16))
+        xin = jnp.einsum("sec,sd->ecd", disp, xg.astype(jnp.bfloat16))
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg)) * jnp.einsum(
+            "ecd,edf->ecf", xin, wu)
+        out = jnp.einsum("ecf,efd->ecd", h, wd)
+        y = jnp.einsum("ecd,sec->sd", out, comb)
+        # load-balance aux loss (Switch): E * mean(frac_tokens * mean_prob)
+        frac = (ge.astype(jnp.float32).sum(1)).mean(0)       # [E]
+        mp = probs.mean(0)
+        aux = E * jnp.sum(frac * mp)
+        return y, aux
+
+    y, aux = jax.lax.map(one_group, xt)
+    y = y.reshape(ngroups * g, d)[:N].reshape(B, T, d)
+    if cfg.num_shared_experts:
+        y = y + mlp_block(p["shared"], x, ctx)
+    return y.astype(x.dtype), aux.mean()

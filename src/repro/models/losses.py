@@ -1,0 +1,28 @@
+"""Losses.  Cross-entropy is written vocab-sharding-safe: reductions over
+the (sharded) vocab axis lower to psum over the model axis; the label
+logit is extracted with an iota-compare-select that XLA fuses into the
+reduction — no replicated [tokens, vocab] buffer is ever materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits: [B, T, V] (V may be sharded); labels: [B, T] int32;
+    mask: [B, T] (1 = count).  Returns (mean_loss, ntokens)."""
+    lg = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lg.max(axis=-1, keepdims=True))
+    shifted = lg - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    V = lg.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    sel = jnp.where(iota == labels[..., None], lg, 0.0)
+    label_logit = sel.sum(axis=-1)
+    per_tok = lse - label_logit
+    if mask is None:
+        return per_tok.mean(), per_tok.size
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return (per_tok * mask).sum() / n, n

@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked scan + decode step.
+
+Recurrence per head h (state N, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t ;   y_t = C_t · h_t + D x_t
+
+Train/prefill uses the SSD chunked algorithm (arXiv:2405.21060): a
+quadratic intra-chunk term (attention-like, MXU-friendly) plus an
+inter-chunk state scan — the TPU-native formulation.  Decode is the O(1)
+recurrent update.  n_groups = 1 (B, C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ShardCtx, init_dense, rms_norm, split_keys
+
+
+def init_mamba(key, cfg):
+    d, di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.conv_width)
+    ks = split_keys(key, 9)
+    return {
+        "wz": init_dense(ks[0], (d, di), fan_in=d),
+        "wx": init_dense(ks[1], (d, di), fan_in=d),
+        "wB": init_dense(ks[2], (d, N), fan_in=d),
+        "wC": init_dense(ks[3], (d, N), fan_in=d),
+        "wdt": init_dense(ks[4], (d, H), fan_in=d),
+        "dt_bias": jnp.zeros((H,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "conv_x": init_dense(ks[5], (W, di), fan_in=W),
+        "conv_B": init_dense(ks[6], (W, N), fan_in=W),
+        "conv_C": init_dense(ks[7], (W, N), fan_in=W),
+        "norm": jnp.zeros((di,)),
+        "wo": init_dense(ks[8], (di, d), fan_in=di),
+    }
+
+
+def mamba_specs(cfg, s):
+    return {
+        "wz": s("fsdp", "ffn"), "wx": s("fsdp", "ffn"),
+        "wB": s("fsdp", None), "wC": s("fsdp", None),
+        "wdt": s("fsdp", None), "dt_bias": s(None),
+        "A_log": s(None), "D": s(None),
+        "conv_x": s(None, "ffn"), "conv_B": s(None, None),
+        "conv_C": s(None, None),
+        "norm": s("ffn"), "wo": s("ffn", "fsdp"),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: [B, T, C]; w: [W, C].
+    state: [B, W-1, C] rolling buffer (decode) or None (train).
+    Returns (y [B,T,C], new_state)."""
+    Wd = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (Wd - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(Wd))
+    new_state = xp[:, -(Wd - 1) :, :] if Wd > 1 else None
+    return y, new_state
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """x: [B,T,H,P]; dt: [B,T,H] (post-softplus); A: [H] (<0);
+    Bm, Cm: [B,T,N].  Returns (y [B,T,H,P], final_state [B,H,N,P])."""
+    B_, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = -(-T // chunk)
+    pad = nc * chunk - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xs = x.reshape(B_, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(B_, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bs = Bm.reshape(B_, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cs = Cm.reshape(B_, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    S0 = (jnp.zeros((B_, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    def step(S, xs_c):
+        xc, dtc, Bc, Cc = xs_c           # [B,q,H,P], [B,q,H], [B,q,N], [B,q,N]
+        xc = xc.astype(jnp.float32)
+        dtc = dtc.astype(jnp.float32)
+        Bc = Bc.astype(jnp.float32)
+        Cc = Cc.astype(jnp.float32)
+        dA = dtc * A[None, None, :]                      # [B,q,H]
+        cum = jnp.cumsum(dA, axis=1)                     # [B,q,H]
+        # intra-chunk:  Y[i] = sum_{j<=i} (C_i.B_j) e^{cum_i-cum_j} dt_j x_j
+        # mask the exponent BEFORE exp: exp(+large) in the dead triangle
+        # would poison gradients through the where (inf * 0 -> NaN)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # [B,i,j,H]
+        diff = jnp.where(tri[None, :, :, None], diff, -1e30)
+        L = jnp.exp(diff)
+        sc = jnp.einsum("bin,bjn->bij", Cc, Bc)                # [B,i,j]
+        M = sc[..., None] * L                                   # [B,i,j,H]
+        xw = xc * dtc[..., None]                                # [B,j,H,P]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xw)
+        # inter-chunk: carry state
+        y_inter = jnp.einsum("bin,bhnp->bihp", Cc, S) * jnp.exp(cum)[..., None]
+        # chunk-local end state + decay of the carried state
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)               # [B,j,H]
+        S_loc = jnp.einsum("bjn,bjh,bjhp->bhnp", Bc, decay_end * dtc, xc)
+        S_new = S * jnp.exp(cum[:, -1, :])[:, :, None, None] + S_loc
+        return S_new, (y_intra + y_inter)
+
+    S_fin, ys = jax.lax.scan(step, S0, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, nc * chunk, H, P)[:, :T]
+    return y, S_fin
+
+
+def mamba_block(p, x, cfg, ctx: ShardCtx, state=None):
+    """x: [B, T, d].  state: None (train/prefill from zero) or dict
+    (conv_x/conv_B/conv_C rolling buffers, ssm [B,H,N,P]).
+    Returns (out [B,T,d], new_state or None)."""
+    B, T, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xb = x.astype(jnp.bfloat16)
+    z = jnp.einsum("btd,de->bte", xb, p["wz"].astype(jnp.bfloat16))
+    xi = jnp.einsum("btd,de->bte", xb, p["wx"].astype(jnp.bfloat16))
+    Bm = jnp.einsum("btd,dn->btn", xb, p["wB"].astype(jnp.bfloat16))
+    Cm = jnp.einsum("btd,dn->btn", xb, p["wC"].astype(jnp.bfloat16))
+    dt = jnp.einsum("btd,dh->bth", xb, p["wdt"].astype(jnp.bfloat16))
+    xi = ctx(xi, "batch", None, "ffn")
+    z = ctx(z, "batch", None, "ffn")
+
+    decoding = state is not None
+    cs_x = state["conv_x"] if decoding else None
+    cs_B = state["conv_B"] if decoding else None
+    cs_C = state["conv_C"] if decoding else None
+    xi, ncx = _causal_conv(xi, p["conv_x"].astype(xi.dtype), cs_x)
+    Bm, ncB = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype), cs_B)
+    Cm, ncC = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype), cs_C)
+    xi = jax.nn.silu(xi)
+    Bm = jax.nn.silu(Bm)
+    Cm = jax.nn.silu(Cm)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    xh = xi.reshape(B, T, H, P)
+
+    if decoding and T == 1:
+        # O(1) recurrent update
+        S = state["ssm"].astype(jnp.float32)             # [B,H,N,P]
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])           # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        S_new = S * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S_new)
+        y = y[:, None]                                    # [B,1,H,P]
+        new_state = {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC, "ssm": S_new}
+    else:
+        init_S = state["ssm"] if decoding else None
+        y, S_new = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, init_S)
+        new_state = (
+            {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC, "ssm": S_new}
+            if decoding or True else None
+        )
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, T, H * P)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y.astype(jnp.bfloat16),
+                     p["wo"].astype(jnp.bfloat16))
+    return ctx(out, "batch", "seq_sp", None).astype(x.dtype), new_state
+
+
+def init_mamba_state(cfg, batch: int):
+    """Zeroed decode state for one layer."""
+    W = cfg.conv_width
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), jnp.bfloat16),
+        "conv_B": jnp.zeros((batch, W - 1, N), jnp.bfloat16),
+        "conv_C": jnp.zeros((batch, W - 1, N), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }

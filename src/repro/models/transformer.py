@@ -1,0 +1,362 @@
+"""Decoder-only LM covering the dense / moe / vlm / ssm / hybrid families.
+
+Layers are stacked (leading L axis) and executed with lax.scan —
+compile-time O(1) in depth — with remat ("nothing saveable" inside the
+body, the carried residual stream is the only saved activation, sharded
+sequence-parallel between layers).
+
+Families:
+  dense  — GQA attention + SwiGLU           (yi-34b, qwen3, llama3.2, smollm)
+  moe    — GQA attention + shared/routed MoE (qwen2-moe, olmoe)
+  ssm    — Mamba2 (SSD) blocks, attention-free          (mamba2-2.7b)
+  hybrid — Mamba2 backbone + one *shared* attention+MLP block applied
+           every ``attn_period`` layers (zamba2-style weight sharing)
+  vlm    — dense backbone + precomputed patch-embedding prefix with
+           prefix-LM (bidirectional prefix) masking       (paligemma)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ShardCtx, NO_SHARD, init_dense, rms_norm, split_keys
+from .layers import (attention_block, attention_specs, init_attention,
+                     init_mlp, init_moe, mlp_block, mlp_specs, moe_block,
+                     moe_block_dropless, moe_specs)
+from .ssm import init_mamba, init_mamba_state, mamba_block, mamba_specs
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_layer(key, cfg):
+    ks = split_keys(key, 4)
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln1": jnp.zeros((cfg.d_model,)), "mamba": init_mamba(ks[0], cfg)}
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,)),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _layer_specs(cfg, s):
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln1": s(None), "mamba": mamba_specs(cfg, s)}
+    p = {"ln1": s(None), "attn": attention_specs(cfg, s), "ln2": s(None)}
+    if cfg.family == "moe":
+        p["moe"] = moe_specs(cfg, s)
+    else:
+        p["mlp"] = mlp_specs(s)
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    ks = split_keys(key, 8)
+    L = cfg.num_layers
+    layer_keys = jax.random.split(ks[0], L)
+    stack = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": init_dense(ks[1], (cfg.vocab_padded, cfg.d_model), fan_in=cfg.d_model),
+        "layers": stack,
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(
+            ks[2], (cfg.d_model, cfg.vocab_padded), fan_in=cfg.d_model
+        )
+    if cfg.family == "hybrid" and cfg.attn_period:
+        params["shared_attn"] = {
+            "ln1": jnp.zeros((cfg.d_model,)),
+            "attn": init_attention(ks[3], cfg),
+            "ln2": jnp.zeros((cfg.d_model,)),
+            "mlp": init_mlp(ks[4], cfg.d_model, cfg.d_ff),
+        }
+    return params
+
+
+def param_specs(cfg, rules):
+    """PartitionSpec pytree aligned with init_params output."""
+    from ..sharding import spec as _sp
+
+    s = functools.partial(_sp, rules)
+    L = _layer_specs(cfg, s)
+    Ls = jax.tree.map(
+        lambda ps: jax.sharding.PartitionSpec(None, *ps), L,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    out = {
+        "embed": s("vocab", "fsdp"),
+        "layers": Ls,
+        "final_norm": s(None),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = s("fsdp", "vocab")
+    if cfg.family == "hybrid" and cfg.attn_period:
+        out["shared_attn"] = {
+            "ln1": s(None),
+            "attn": attention_specs(cfg, s),
+            "ln2": s(None),
+            "mlp": mlp_specs(s),
+        }
+    return out
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _bf16_tree(tree):
+    return jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16) if a.dtype == jnp.float32 else a, tree)
+
+
+def _attn_layer(lp, x, cfg, ctx, positions, cache, prefix_len):
+    h, new_cache = attention_block(
+        lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, ctx,
+        positions, cache=cache, prefix_len=prefix_len,
+    )
+    x = x + h
+    if cfg.family == "moe":
+        decode = cache is not None and x.shape[1] == 1
+        moe_fn = moe_block_dropless if decode else moe_block
+        h, aux = moe_fn(lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+    else:
+        h, aux = mlp_block(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), ctx), 0.0
+    return x + h, new_cache, aux
+
+
+def _mamba_layer(lp, x, cfg, ctx, state):
+    h, new_state = mamba_block(
+        lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, ctx, state
+    )
+    return x + h, new_state
+
+
+def forward(
+    params, cfg, ctx: ShardCtx, tokens=None, prefix_embeds=None,
+    cache=None, positions=None,
+):
+    """Returns (logits [B, T, V], new_cache, aux_loss).
+
+    ``cache`` (decode): dict with per-family stacked state; see init_cache.
+    ``prefix_embeds``: [B, Np, d] for vlm (prepended before tokens).
+    """
+    assert tokens is not None or prefix_embeds is not None
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds.astype(jnp.bfloat16))
+    if tokens is not None and tokens.shape[1] > 0:
+        emb = jnp.take(params["embed"].astype(jnp.bfloat16), tokens, axis=0)
+        if cfg.tie_embeddings:
+            emb = emb * np.sqrt(cfg.d_model)
+        parts.append(emb)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    B, T, _ = x.shape
+    x = ctx(x, "batch", "seq_sp", None)
+
+    # cast compute weights to bf16 *before* the layer scan: the per-layer
+    # FSDP all-gathers then move 2-byte words (EXPERIMENTS.md §Perf-2)
+    params = dict(params)
+    params["layers"] = _bf16_tree(params["layers"])
+    if "shared_attn" in params:
+        params["shared_attn"] = _bf16_tree(params["shared_attn"])
+
+    start = cache["len"] if cache is not None else 0
+    if positions is None:
+        positions = start + jnp.arange(T)[None, :]
+        positions = jnp.broadcast_to(positions, (B, T))
+    prefix_len = cfg.num_prefix_embeds if cfg.prefix_lm else 0
+
+    aux_total = 0.0
+    new_cache = dict(cache) if cache is not None else None
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, kv_new, aux_total = _scan_attn_layers(
+            params["layers"], x, cfg, ctx, positions,
+            None if cache is None else cache["kv"], prefix_len,
+        )
+        if cache is not None:
+            new_cache["kv"] = kv_new
+    elif cfg.family == "ssm":
+        x, st_new = _scan_mamba_layers(
+            params["layers"], x, cfg, ctx,
+            None if cache is None else cache["ssm"],
+        )
+        if cache is not None:
+            new_cache["ssm"] = st_new
+    elif cfg.family == "hybrid":
+        x, st_new, kv_new = _hybrid_forward(params, x, cfg, ctx, positions, cache)
+        if cache is not None:
+            new_cache["ssm"] = st_new
+            new_cache["kv"] = kv_new
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x.astype(jnp.bfloat16),
+                        head.astype(jnp.bfloat16))
+    logits = ctx(logits, "batch", None, "vocab")
+    if cache is not None:
+        new_cache["len"] = cache["len"] + T
+    return logits, new_cache, aux_total
+
+
+def _scan_attn_layers(stack, x, cfg, ctx, positions, kv_cache, prefix_len):
+    def body(carry, xs):
+        x, aux = carry
+        lp, cache_l = xs
+        x, new_c, a = _attn_layer(lp, x, cfg, ctx, positions, cache_l, prefix_len)
+        x = ctx(x, "batch", "seq_sp", None)
+        return (x, aux + a), new_c
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), kv_new = jax.lax.scan(body_fn, (x, jnp.float32(0)), (stack, kv_cache))
+    else:
+        L = cfg.num_layers
+        aux = jnp.float32(0)
+        kv_news = []
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], stack)
+            cl = None if kv_cache is None else jax.tree.map(lambda a: a[i], kv_cache)
+            (x, aux), nc = body_fn((x, aux), (lp, cl))
+            kv_news.append(nc)
+        kv_new = (None if kv_cache is None
+                  else jax.tree.map(lambda *xs: jnp.stack(xs), *kv_news))
+    return x, kv_new, aux
+
+
+def _scan_mamba_layers(stack, x, cfg, ctx, states):
+    def body(x, xs):
+        lp, st = xs
+        x, new_st = _mamba_layer(lp, x, cfg, ctx, st)
+        x = ctx(x, "batch", "seq_sp", None)
+        return x, new_st
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, st_new = jax.lax.scan(body_fn, x, (stack, states))
+    return x, st_new
+
+
+def _hybrid_forward(params, x, cfg, ctx, positions, cache):
+    """Groups of ``attn_period`` mamba layers, shared attn after each group,
+    then the tail layers.  Shared-attn KV cache has one slot per group."""
+    L, k = cfg.num_layers, cfg.attn_period
+    G = L // k
+    tail = L - G * k
+    stack = params["layers"]
+    grouped = jax.tree.map(lambda a: a[: G * k].reshape(G, k, *a.shape[1:]), stack)
+    tail_stack = jax.tree.map(lambda a: a[G * k :], stack)
+    ssm_states = cache["ssm"] if cache is not None else None
+    kv = cache["kv"] if cache is not None else None
+
+    def inner(x, xs):
+        lp, st = xs
+        x, new_st = _mamba_layer(lp, x, cfg, ctx, st)
+        x = ctx(x, "batch", "seq_sp", None)
+        return x, new_st
+
+    inner_fn = jax.checkpoint(inner, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else inner
+
+    def group_body(carry, xs):
+        x = carry
+        grp, grp_states, kv_l = xs
+        x, new_states = jax.lax.scan(inner_fn, x, (grp, grp_states))
+        x, new_kv = _shared_block_scanstep(params["shared_attn"], x, cfg, ctx,
+                                           positions, kv_l)
+        return x, (new_states, new_kv)
+
+    grp_states = (None if ssm_states is None else
+                  jax.tree.map(lambda a: a[: G * k].reshape(G, k, *a.shape[1:]),
+                               ssm_states))
+    x, (new_grp_states, new_kv) = jax.lax.scan(
+        group_body, x, (grouped, grp_states, kv)
+    )
+    tail_states = (None if ssm_states is None else
+                   jax.tree.map(lambda a: a[G * k :], ssm_states))
+    new_tail_states = None
+    if tail:
+        x, new_tail_states = jax.lax.scan(inner_fn, x, (tail_stack, tail_states))
+    if ssm_states is None:
+        return x, None, None
+    flat = jax.tree.map(lambda a: a.reshape(G * k, *a.shape[2:]), new_grp_states)
+    st_new = (flat if not tail else
+              jax.tree.map(lambda a, b: jnp.concatenate([a, b]), flat,
+                           new_tail_states))
+    return x, st_new, new_kv
+
+
+def _shared_block_scanstep(sp, x, cfg, ctx, positions, cache_l):
+    h, new_cache = attention_block(
+        sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps), cfg, ctx,
+        positions, cache=cache_l,
+    )
+    x = x + h
+    x = x + mlp_block(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps), ctx)
+    return ctx(x, "batch", "seq_sp", None), new_cache
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int):
+    """Decode cache pytree (stacked over layers for the scans)."""
+    K, Dh, L = cfg.eff_num_kv_heads, cfg.head_dim, cfg.num_layers
+    cache: Dict[str, Any] = {"len": jnp.int32(0)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache["kv"] = {
+            "k": jnp.zeros((L, batch, max_len, K, Dh), jnp.bfloat16),
+            "v": jnp.zeros((L, batch, max_len, K, Dh), jnp.bfloat16),
+            "len": jnp.zeros((L,), jnp.int32),
+        }
+    elif cfg.family == "ssm":
+        st = init_mamba_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L, *a.shape)).copy(), st
+        )
+    elif cfg.family == "hybrid":
+        st = init_mamba_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L, *a.shape)).copy(), st
+        )
+        G = cfg.num_layers // cfg.attn_period
+        cache["kv"] = {
+            "k": jnp.zeros((G, batch, max_len, K, Dh), jnp.bfloat16),
+            "v": jnp.zeros((G, batch, max_len, K, Dh), jnp.bfloat16),
+            "len": jnp.zeros((G,), jnp.int32),
+        }
+    return cache
+
+
+def cache_specs(cfg, rules):
+    from ..sharding import spec as _sp
+    s = functools.partial(_sp, rules)
+    specs: Dict[str, Any] = {"len": s()}
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        kv = {
+            "k": s(None, "cache_batch", "cache_seq", "cache_heads", None),
+            "v": s(None, "cache_batch", "cache_seq", "cache_heads", None),
+            "len": s(None),
+        }
+        specs["kv"] = kv
+    if cfg.family in ("ssm", "hybrid"):
+        specs["ssm"] = {
+            "conv_x": s(None, "cache_batch", None, "ffn"),
+            "conv_B": s(None, "cache_batch", None, None),
+            "conv_C": s(None, "cache_batch", None, None),
+            "ssm": s(None, "cache_batch", "ssm_heads", None, None),
+        }
+    return specs

@@ -1,0 +1,117 @@
+"""Logical-axis sharding rules -> PartitionSpec (MaxText-style).
+
+Model code names array axes logically ('batch', 'heads', 'ffn', ...);
+a rule table maps logical names to mesh axes.  Batch maps to the
+composed data axes ('pod','data') when the pod axis exists, realizing
+hierarchical DP (intra-pod reduce-scatter over ICI, inter-pod all-reduce
+over DCI) without any model-code change — the same mechanism scales the
+pod axis beyond 2 slices.
+
+Non-divisible cases (yi-34b's 56 heads on a 16-way model axis, qwen2-moe's
+60 experts, seamless' 256206 vocab) rely on GSPMD implicit padding; the
+resulting compute slack shows up in the roofline's MODEL_FLOPS/HLO_FLOPS
+ratio and per-arch profiles can disable head sharding instead
+(``shard_attn_heads=False`` -> replicated attention + sequence-parallel
+residual, the right call for smollm's 9 heads).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh: Mesh, cfg, small_batch: bool = False,
+               serving: bool = False) -> Dict[str, Optional[Tuple[str, ...]]]:
+    """``small_batch``: the global batch is smaller than the data axes
+    (long-context decode) — batch stays replicated and the KV-cache
+    sequence dim takes the data axes instead.  ``serving``: weights are
+    bf16, TP-sharded and DP-replicated (no per-token FSDP gathers —
+    EXPERIMENTS.md §Perf-3); training keeps fsdp weight sharding."""
+    dp = data_axes(mesh)
+    model = ("model",) if "model" in mesh.axis_names else None
+    if small_batch or serving:
+        rules = make_rules(mesh, cfg)
+        if serving:
+            rules["fsdp"] = None
+        if small_batch:
+            rules["batch"] = None
+            rules["cache_batch"] = None
+            rules["cache_seq"] = dp or None
+        return rules
+    rules: Dict[str, Optional[Tuple[str, ...]]] = {
+        "batch": dp or None,
+        "fsdp": dp or None,  # weight/optimizer-state sharding over data (ZeRO-3
+                             # via GSPMD: per-layer all-gather, grads reduce-scatter)
+        "seq": None,
+        "seq_sp": model,  # sequence-parallel residual-stream shard points
+        "d_model": None,
+        "heads": model if cfg.shard_attn_heads else None,
+        "kv_heads": model if cfg.shard_attn_heads else None,
+        "head_dim": None,
+        "ffn": model if cfg.shard_ffn else None,
+        "vocab": model if cfg.shard_vocab else None,
+        "experts": model if cfg.shard_experts else None,
+        "expert_ffn": None,
+        "layers": None,
+        "ssm_heads": model,
+        "ssm_state": None,
+        "conv": None,
+        "cache_batch": dp or None,
+        "cache_heads": model if cfg.shard_attn_heads else None,
+        "cache_seq": None if cfg.shard_attn_heads else model,
+    }
+    return rules
+
+
+def spec(rules, *names: Optional[str]) -> P:
+    """PartitionSpec from logical axis names (None = replicated axis)."""
+    out = []
+    for n in names:
+        if n is None:
+            out.append(None)
+        else:
+            r = rules[n]
+            out.append(r if r is None else (r if len(r) > 1 else r[0]))
+    return P(*out)
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(sp: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes don't divide evenly —
+    required for jit input shardings (GSPMD pads internal constraints but
+    inputs must shard exactly)."""
+    entries = list(sp) + [None] * (len(shape) - len(sp))
+    out = []
+    for dim, entry in zip(shape, entries):
+        n = _axes_size(mesh, entry)
+        out.append(entry if (n > 1 and dim % n == 0) or n == 1 else None)
+    return P(*out)
+
+
+def sanitize_spec_tree(spec_tree, struct_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, st: sanitize_spec(s, st.shape, mesh), spec_tree, struct_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, rules, *names: Optional[str]):
+    """with_sharding_constraint via logical names; silently replicates any
+    dim the axes don't divide (no-op off-mesh)."""
+    sp = sanitize_spec(spec(rules, *names), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, sp))

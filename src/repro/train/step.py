@@ -1,0 +1,73 @@
+"""Jitted train / serve steps wired for a mesh (or unsharded for tests)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import api
+from ..models.common import ShardCtx, NO_SHARD
+from ..sharding import make_rules, spec as _spec
+from . import optim
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                    mesh=None, small_batch: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).  state =
+    {params, opt}.  With a mesh, shardings are applied via logical rules;
+    without (CPU tests) everything is replicated."""
+    rules = make_rules(mesh, cfg, small_batch) if mesh is not None else None
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NO_SHARD
+
+    def loss(params, batch):
+        return api.loss_fn(params, batch, cfg, ctx)
+
+    def train_step(state, batch):
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            state["params"], batch)
+        new_params, new_opt, om = optim.update(
+            grads, state["opt"], state["params"], opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = l
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, small_batch: bool = False,
+                    serving: bool = True):
+    """Returns decode_step(params, cache, tokens) -> (logits, cache)."""
+    rules = (make_rules(mesh, cfg, small_batch, serving=serving)
+             if mesh is not None else None)
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NO_SHARD
+
+    def serve_step(params, cache, tokens):
+        return api.decode_fn(params, cache, tokens, cfg, ctx)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, mesh=None,
+                      small_batch: bool = False, serving: bool = True):
+    rules = (make_rules(mesh, cfg, small_batch, serving=serving)
+             if mesh is not None else None)
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NO_SHARD
+
+    def prefill(params, batch):
+        return api.prefill_fn(params, batch, cfg, ctx, max_len)
+
+    return prefill
+
+
+def init_state(cfg: ModelConfig, key):
+    params = api.init_params(cfg, key)
+    return {"params": params, "opt": optim.init(params)}
+
+
+def state_specs(cfg: ModelConfig, rules):
+    ps = api.param_specs(cfg, rules)
+    return {"params": ps, "opt": {"mu": ps, "nu": ps, "step": _spec(rules)}}

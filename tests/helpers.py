@@ -1,0 +1,23 @@
+"""Shared test helpers: random regex/graph generators."""
+import random
+
+from repro.core import regex as rx
+
+
+def rand_expr_ast(rnd: random.Random, depth: int, npred: int,
+                  allow_inverse: bool = True):
+    r = rnd.random()
+    if depth <= 0 or r < 0.4:
+        inv = allow_inverse and rnd.random() < 0.3
+        return rx.Lit(str(rnd.randrange(npred)), inverse=inv)
+    if r < 0.6:
+        return rx.Cat(rand_expr_ast(rnd, depth - 1, npred, allow_inverse),
+                      rand_expr_ast(rnd, depth - 1, npred, allow_inverse))
+    if r < 0.75:
+        return rx.Alt(rand_expr_ast(rnd, depth - 1, npred, allow_inverse),
+                      rand_expr_ast(rnd, depth - 1, npred, allow_inverse))
+    if r < 0.85:
+        return rx.Star(rand_expr_ast(rnd, depth - 1, npred, allow_inverse))
+    if r < 0.95:
+        return rx.Plus(rand_expr_ast(rnd, depth - 1, npred, allow_inverse))
+    return rx.Opt(rand_expr_ast(rnd, depth - 1, npred, allow_inverse))

@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+configs, one forward/train step on CPU, output shapes + no NaNs; decode
+consistency; MoE routing behavior; SSD vs naive recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_applicable, smoke_variant
+from repro.models import api
+from repro.models.common import NO_SHARD
+from repro.train import optim
+from repro.train import step as tstep
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+
+
+def _smoke_batch(cfg, B=2, T=32):
+    if cfg.family == "encdec":
+        return {
+            "frames": jnp.asarray(RNG.normal(size=(B, T, cfg.d_model)), jnp.bfloat16),
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        Np = cfg.num_prefix_embeds
+        Tt = T - Np
+        return {
+            "patch_embeds": jnp.asarray(RNG.normal(size=(B, Np, cfg.d_model)), jnp.bfloat16),
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, Tt)), jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+            "mask": jnp.asarray(
+                np.concatenate([np.zeros((B, Np)), np.ones((B, Tt))], 1), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_and_train(arch):
+    cfg = smoke_variant(get_config(arch))
+    state = tstep.init_state(cfg, KEY)
+    batch = _smoke_batch(cfg)
+    ts = jax.jit(tstep.make_train_step(cfg, optim.AdamWConfig(total_steps=4)))
+    state, m = ts(state, batch)
+    assert np.isfinite(float(m["loss"])), arch
+    assert np.isfinite(float(m["grad_norm"])), arch
+    # loss near log(V) at init — logits are sane, not exploded
+    assert 0.5 * np.log(cfg.vocab_size) < float(m["xent"]) < 3 * np.log(cfg.vocab_size)
+    # second step changes the loss (optimizer actually updates)
+    state, m2 = ts(state, batch)
+    assert float(m2["loss"]) != float(m["loss"])
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_decode_consistency(arch):
+    """prefill(T)+decode(1) must equal prefill(T+1)'s last logits."""
+    cfg = smoke_variant(get_config(arch))
+    params = api.init_params(cfg, KEY)
+    B, T = 2, 17
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T + 1)), jnp.int32)
+    extra = {}
+    Np = 0
+    if cfg.family == "vlm":
+        Np = cfg.num_prefix_embeds
+        extra["patch_embeds"] = jnp.asarray(
+            RNG.normal(size=(B, Np, cfg.d_model)), jnp.bfloat16)
+    elif cfg.family == "encdec":
+        extra["frames"] = jnp.asarray(
+            RNG.normal(size=(B, 8, cfg.d_model)), jnp.bfloat16)
+    ML = T + 1 + Np + 4
+    ref, _ = api.prefill_fn(params, {**extra, "tokens": toks}, cfg, NO_SHARD,
+                            max_len=ML)
+    _, cache = api.prefill_fn(params, {**extra, "tokens": toks[:, :T]}, cfg,
+                              NO_SHARD, max_len=ML)
+    dec, _ = api.decode_fn(params, cache, toks[:, T:T + 1], cfg, NO_SHARD)
+    err = float(jnp.max(jnp.abs(dec.astype(jnp.float32) - ref.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-6
+    assert err < 0.1 * scale + 0.06, (arch, err, scale)
+
+
+def test_effective_dims():
+    """TP-adaptation math (DESIGN.md §6)."""
+    yi = get_config("yi-34b")
+    assert yi.eff_num_kv_heads == 16 and yi.eff_num_heads == 64
+    q3 = get_config("qwen3-4b")
+    assert q3.eff_num_kv_heads == 16 and q3.eff_num_heads == 32
+    moe = get_config("qwen2-moe-a2.7b")
+    assert moe.eff_num_experts == 64
+    sm = get_config("seamless-m4t-medium")
+    assert sm.vocab_padded % 16 == 0 and sm.vocab_padded >= sm.vocab_size
+    smol = get_config("smollm-135m")
+    assert smol.eff_num_heads == 9  # unsharded attention: no padding
+
+
+def test_moe_padded_experts_never_routed():
+    from repro.models.layers import _moe_router, init_moe
+    from dataclasses import replace
+    cfg = replace(smoke_variant(get_config("qwen2-moe-a2.7b")),
+                  num_experts=3, top_k=2, tp_divisor=4)  # pads 3 -> 4
+    assert cfg.eff_num_experts == 4
+    p = init_moe(KEY, cfg)
+    x = jnp.asarray(RNG.normal(size=(64, cfg.d_model)), jnp.float32)
+    probs, top_p, top_e = _moe_router(p, x, cfg)
+    assert int(jnp.max(top_e)) < 3  # the padded expert is never selected
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == step-by-step recurrence h_t = a h + dt B x."""
+    from repro.models.ssm import _ssd_chunked
+    B, T, H, P, N = 2, 37, 3, 4, 5
+    x = RNG.normal(size=(B, T, H, P)).astype(np.float32)
+    dt = np.abs(RNG.normal(size=(B, T, H))).astype(np.float32) * 0.5
+    A = -np.abs(RNG.normal(size=(H,))).astype(np.float32)
+    Bm = RNG.normal(size=(B, T, N)).astype(np.float32)
+    Cm = RNG.normal(size=(B, T, N)).astype(np.float32)
+    y, S = _ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                        jnp.asarray(Bm), jnp.asarray(Cm), chunk=8)
+    # naive
+    h = np.zeros((B, H, N, P))
+    ys = np.zeros((B, T, H, P))
+    for t in range(T):
+        a = np.exp(dt[:, t, :] * A[None, :])                     # [B,H]
+        h = h * a[:, :, None, None] + np.einsum(
+            "bn,bh,bhp->bhnp", Bm[:, t], dt[:, t], x[:, t])
+        ys[:, t] = np.einsum("bn,bhnp->bhp", Cm[:, t], h)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(S), h, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.layers import flash_attention
+    B, T, H, K, Dh = 2, 33, 4, 2, 8
+    q = RNG.normal(size=(B, T, H, Dh)).astype(np.float32)
+    k = RNG.normal(size=(B, T, K, Dh)).astype(np.float32)
+    v = RNG.normal(size=(B, T, K, Dh)).astype(np.float32)
+    out = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True, chunk=7))
+    # naive
+    G = H // K
+    kk = np.repeat(k, G, axis=2)
+    vv = np.repeat(v, G, axis=2)
+    s = np.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(Dh)
+    mask = np.tril(np.ones((T, T), dtype=bool))
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    exp = np.einsum("bhqk,bkhd->bqhd", p, vv)
+    np.testing.assert_allclose(out, exp, rtol=2e-3, atol=2e-3)
+    # GQA grouping: head h attends via kv head h // G — verify vs wrong
+    # grouping by checking a nontrivial K > 1 case differs per head group
+    assert not np.allclose(exp[:, :, 0], exp[:, :, -1])
+
+
+def test_shape_applicability_table():
+    skipped = [(a, s.name) for a in ALL_ARCHS for s in SHAPES.values()
+               if not shape_applicable(get_config(a), s)[0]]
+    assert len(skipped) == 8  # exactly the 8 full-attention long_500k cells
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("mamba2-2.7b", "long_500k") not in skipped
+    assert ("zamba2-7b", "long_500k") not in skipped
