@@ -42,6 +42,8 @@ SUITES = {
                                      fromlist=["run"]).run(),
     "kernels": lambda: __import__("benchmarks.kernel_bench",
                                   fromlist=["run"]).run(),
+    "batch_queries": lambda: __import__("benchmarks.batch_queries",
+                                        fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -1,12 +1,14 @@
-"""Batched RPQ serving: many queries answered in one multi-source BFS.
+"""Batched RPQ serving: many queries answered through the multi-query API.
 
     PYTHONPATH=src python examples/serve_rpq.py
 
-The serving pattern the dense engine is built for: requests with the same
-regular expression but different endpoints share one Glushkov automaton
-and run as a *batched* frontier (the multi-source axis), exactly like a
-batched decode step serves many sequences (DESIGN.md §2: range-
-parallelism -> batch axis).
+The serving pattern the engines are built for: a request stream where a
+few hot expressions recur with different endpoints.  ``eval_many``
+(engines.py dispatch) shares one Glushkov automaton + plane tables per
+distinct expression via the plan cache and coalesces same-plan requests
+into one multi-source batched BFS (the leading batch axis — DESIGN.md §2:
+range-parallelism), exactly like a batched decode step serves many
+sequences.
 """
 import sys
 import time
@@ -15,43 +17,39 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import regex as rx
-from repro.core.dense import DenseGraph, DenseRPQ, _plane_tables, _bfs_batched
+from repro.core.engines import Query, eval_many, make_engine
 from repro.core.fixtures import scale_free_graph
-from repro.core.rpq import RingRPQ
-from repro.core.ring import Ring
-
-import jax.numpy as jnp
 
 
 def main():
     g = scale_free_graph(3000, 8, 24000, seed=23)
-    dg = DenseGraph.from_graph(g)
-    eng = DenseRPQ(g)
-    expr = "0/1*/2"
-    ast = rx.parse(expr)
-    gk = eng._automaton(ast)
-    B_, PRED, _ = _plane_tables(gk, dg.num_labels)
+    eng = make_engine(g, "dense", source_batch=16)
 
-    # a batch of 16 "requests": who reaches object o_i via expr?
+    # 48 "requests": 3 hot expressions x 16 endpoints each
     rng = np.random.default_rng(0)
-    objs = rng.integers(0, g.num_nodes, 16)
-    planes = np.stack([eng._start_planes(gk, [o]) for o in objs])
+    exprs = ["0/1*/2", "(0|3)+", "^1/0*"]
+    queries = [Query(e, obj=int(o))
+               for e in exprs
+               for o in rng.integers(0, g.num_nodes, 16)]
+
+    # warm up untimed with the real batch: _bfs_batched retraces per
+    # (chunk, S) shape, so a token warm-up would leave compilation in the
+    # timed run
+    eval_many(eng, queries)
     t0 = time.time()
-    visited = _bfs_batched(dg.subj, dg.pred, dg.obj, B_, PRED,
-                           jnp.asarray(planes), g.num_nodes,
-                           g.num_nodes * (gk.m + 1) + 1)
-    hits = np.asarray(visited[:, :, 0]) > 0
+    answers = eval_many(eng, queries)
     dt = time.time() - t0
-    print(f"served 16 RPQ requests ({expr!r}) in one batched BFS: "
-          f"{dt*1e3:.1f} ms total, {dt/16*1e3:.2f} ms/request")
+    print(f"served {len(queries)} RPQ requests ({len(exprs)} hot exprs) "
+          f"through eval_many: {dt*1e3:.1f} ms total, "
+          f"{dt/len(queries)*1e3:.2f} ms/request")
+    print(f"plan cache: {eng.plans.hits} hits / {eng.plans.misses} misses")
 
     # validate a few against the faithful engine
-    ring_eng = RingRPQ(Ring(g))
-    for i in [0, 5, 9]:
-        want = {s for (s, _) in ring_eng.eval(expr, obj=int(objs[i]))}
-        got = set(np.nonzero(hits[i])[0].tolist())
-        assert got == want, (i, len(got), len(want))
+    ring_eng = make_engine(g, "ring")
+    for i in [0, 17, 41]:
+        q = queries[i]
+        want = ring_eng.eval(q.expr, obj=q.obj)
+        assert answers[i] == want, (i, len(answers[i]), len(want))
     print("spot-checked 3 requests against the ring engine: agree. ok.")
 
 

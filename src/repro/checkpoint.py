@@ -27,7 +27,40 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard
+import zlib
+
+try:
+    import zstandard
+except ImportError:
+    zstandard = None
+
+
+# Pluggable compression: zstd when available, stdlib zlib otherwise.  The
+# manifest records the codec so restore always picks the right
+# decompressor regardless of what this process has installed.
+DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+
+
+def _compress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("zstd codec requested but zstandard not installed")
+        return zstandard.ZstdCompressor(level=3).compress(blob)
+    if codec == "zlib":
+        return zlib.compress(blob, level=3)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed in this environment")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree) -> List[Tuple[str, np.ndarray]]:
@@ -40,9 +73,10 @@ def _flatten(tree) -> List[Tuple[str, np.ndarray]]:
 
 
 def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None,
-         keep_n: int = 3) -> str:
+         keep_n: int = 3, codec: Optional[str] = None) -> str:
     """Atomically write checkpoint ``step``.  ``extra``: json-serializable
-    (data-pipeline position, rng, config fingerprint...)."""
+    (data-pipeline position, rng, config fingerprint...).  ``codec``:
+    "zstd" or "zlib" (default: zstd when installed, else zlib)."""
     root = Path(ckpt_dir)
     root.mkdir(parents=True, exist_ok=True)
     final = root / f"step_{step:010d}"
@@ -51,9 +85,9 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None
         shutil.rmtree(tmp)
     tmp.mkdir()
 
-    cctx = zstandard.ZstdCompressor(level=3)
-    manifest = {"step": step, "created": time.time(), "arrays": {},
-                "extra": extra or {}}
+    codec = codec or DEFAULT_CODEC
+    manifest = {"step": step, "created": time.time(), "codec": codec,
+                "arrays": {}, "extra": extra or {}}
     leaves = _flatten(state)
     payload = {}
     for key, arr in leaves:
@@ -63,8 +97,8 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict[str, Any]] = None
             "sha256": hashlib.sha256(buf).hexdigest(),
         }
         payload[key] = buf
-    blob = cctx.compress(msgpack.packb(
-        {k: v for k, v in payload.items()}, use_bin_type=True))
+    blob = _compress(msgpack.packb(
+        {k: v for k, v in payload.items()}, use_bin_type=True), codec)
     with open(tmp / "arrays.msgpack.zst", "wb") as f:
         f.write(blob)
         f.flush()
@@ -113,9 +147,10 @@ def restore(ckpt_dir: str, target_state, step: Optional[int] = None,
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     d = Path(ckpt_dir) / f"step_{step:010d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    dctx = zstandard.ZstdDecompressor()
+    # pre-codec manifests were always zstd-compressed
+    codec = manifest.get("codec", "zstd")
     payload = msgpack.unpackb(
-        dctx.decompress((d / "arrays.msgpack.zst").read_bytes()),
+        _decompress((d / "arrays.msgpack.zst").read_bytes(), codec),
         raw=False)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(target_state)

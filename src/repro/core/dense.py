@@ -33,13 +33,14 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import regex as rx
+from .engines import PlanCache, QueryLike, as_query
 from .glushkov import Glushkov
 from .ring import LabeledGraph
 
@@ -75,6 +76,12 @@ class DenseGraph:
             num_nodes=g.num_nodes,
             num_labels=2 * P,
         )
+
+
+def _start_row(g: Glushkov) -> np.ndarray:
+    """[S] int8 plane row for a start object: F minus the eps bit."""
+    D0 = g.F & ~1
+    return np.array([(D0 >> i) & 1 for i in range(g.m + 1)], dtype=np.int8)
 
 
 def _plane_tables(g: Glushkov, num_labels: int):
@@ -151,6 +158,16 @@ def _bfs_inner(subj, pred, obj, B, PRED, start_planes, num_nodes, max_steps):
     return out[1]
 
 
+@dataclass
+class _DensePlan:
+    """Compiled dense-side plan: automaton + device-resident bool-plane
+    tables (B, PRED) — shared across queries via the plan cache."""
+
+    g: Glushkov
+    B: jnp.ndarray
+    PRED: jnp.ndarray
+
+
 class DenseRPQ:
     """Dense-engine 2RPQ evaluation with RingRPQ-identical semantics."""
 
@@ -158,6 +175,7 @@ class DenseRPQ:
         self.graph = graph
         self.dg = DenseGraph.from_graph(graph)
         self.source_batch = source_batch
+        self.plans = PlanCache()
 
     def _automaton(self, ast) -> Glushkov:
         g = self.graph
@@ -174,29 +192,62 @@ class DenseRPQ:
 
         return Glushkov.from_ast(ast, resolve)
 
+    def _plan(self, ast) -> _DensePlan:
+        """Automaton + plane tables for ``ast``, shared via the plan cache
+        (keyed by the canonical printed AST)."""
+
+        def build():
+            g = self._automaton(ast)
+            B, PRED, _F = _plane_tables(g, self.dg.num_labels)
+            return _DensePlan(g=g, B=B, PRED=PRED)
+
+        return self.plans.get(str(ast), build)
+
     def _start_planes(self, g: Glushkov, objs) -> np.ndarray:
         """[V, S] planes with F (minus eps bit) active on the start objects."""
         V = self.graph.num_nodes
-        S = g.m + 1
-        D0 = g.F & ~1
-        planes = np.zeros((V, S), dtype=np.int8)
-        frow = np.array([(D0 >> i) & 1 for i in range(S)], dtype=np.int8)
-        planes[np.asarray(objs)] = frow
+        planes = np.zeros((V, g.m + 1), dtype=np.int8)
+        planes[np.asarray(objs)] = _start_row(g)
         return planes
 
-    def _run_from(self, g: Glushkov, objs) -> np.ndarray:
+    def _run_from(self, plan: _DensePlan, objs) -> np.ndarray:
         """Returns bool[V]: nodes whose initial-state plane activated."""
         V = self.graph.num_nodes
+        g = plan.g
         if g.F & ~1 == 0:
             return np.zeros(V, dtype=bool)
         dg = self.dg
         max_steps = V * (g.m + 1) + 1
         visited, _ = _bfs(
-            dg.subj, dg.pred, dg.obj, *(_plane_tables(g, dg.num_labels)[:2]),
+            dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
             jnp.asarray(self._start_planes(g, objs)),
             num_nodes=V, max_steps=max_steps,
         )
         return np.asarray(visited[:, 0]) > 0
+
+    def _run_from_batched(self, plan: _DensePlan, starts: Sequence[int],
+                          batch_size: Optional[int] = None) -> np.ndarray:
+        """Multi-source batched BFS: bool[len(starts), V] hit planes, one
+        independent start node per batch row (chunked over source_batch)."""
+        V = self.graph.num_nodes
+        g = plan.g
+        hits = np.zeros((len(starts), V), dtype=bool)
+        if g.F & ~1 == 0 or not len(starts):
+            return hits
+        dg = self.dg
+        Bsz = batch_size or self.source_batch
+        S = g.m + 1
+        frow = _start_row(g)
+        for i in range(0, len(starts), Bsz):
+            chunk = np.asarray(starts[i : i + Bsz], dtype=np.int64)
+            planes = np.zeros((len(chunk), V, S), dtype=np.int8)
+            planes[np.arange(len(chunk)), chunk] = frow
+            visited = _bfs_batched(
+                dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
+                jnp.asarray(planes), V, V * S + 1,
+            )
+            hits[i : i + len(chunk)] = np.asarray(visited[:, :, 0]) > 0
+        return hits
 
     def eval(
         self,
@@ -213,46 +264,87 @@ class DenseRPQ:
         if subject is None and obj is None:
             if null:
                 out.update((v, v) for v in range(V))
-            g_bwd = self._automaton(ast)
-            sources = np.nonzero(self._run_from(g_bwd, np.arange(V)))[0]
-            g_fwd = self._automaton(rx.reverse(ast))
-            # batched phase 2: B sources at a time
-            Bsz = self.source_batch
-            dg = self.dg
-            Btab, PRED, _F = _plane_tables(g_fwd, dg.num_labels)
-            if g_fwd.F & ~1 != 0:
-                for i in range(0, len(sources), Bsz):
-                    chunk = sources[i : i + Bsz]
-                    planes = np.stack(
-                        [self._start_planes(g_fwd, [s]) for s in chunk]
-                    )
-                    visited = _bfs_batched(
-                        dg.subj, dg.pred, dg.obj, Btab, PRED,
-                        jnp.asarray(planes), V, V * (g_fwd.m + 1) + 1,
-                    )
-                    hit = np.asarray(visited[:, :, 0]) > 0
-                    for bi, s in enumerate(chunk):
-                        for o in np.nonzero(hit[bi])[0]:
-                            out.add((int(s), int(o)))
+            sources = np.nonzero(self._run_from(self._plan(ast), np.arange(V)))[0]
+            # batched phase 2: source_batch sources at a time
+            p_fwd = self._plan(rx.reverse(ast))
+            hits = self._run_from_batched(p_fwd, [int(s) for s in sources])
+            for bi, s in enumerate(sources):
+                for o in np.nonzero(hits[bi])[0]:
+                    out.add((int(s), int(o)))
         elif subject is None:
             if null:
                 out.add((obj, obj))
-            g_bwd = self._automaton(ast)
-            for s in np.nonzero(self._run_from(g_bwd, [obj]))[0]:
+            for s in np.nonzero(self._run_from(self._plan(ast), [obj]))[0]:
                 out.add((int(s), obj))
         elif obj is None:
             if null:
                 out.add((subject, subject))
-            g_fwd = self._automaton(rx.reverse(ast))
-            for o in np.nonzero(self._run_from(g_fwd, [subject]))[0]:
+            p_fwd = self._plan(rx.reverse(ast))
+            for o in np.nonzero(self._run_from(p_fwd, [subject]))[0]:
                 out.add((subject, int(o)))
         else:
             if null and subject == obj:
                 out.add((subject, obj))
             else:
-                g_bwd = self._automaton(ast)
-                if self._run_from(g_bwd, [obj])[subject]:
+                if self._run_from(self._plan(ast), [obj])[subject]:
                     out.add((subject, obj))
         if limit is not None and len(out) > limit:
             out = set(sorted(out)[:limit])
         return out
+
+    def eval_many(
+        self,
+        queries: Sequence[QueryLike],
+        batch_size: Optional[int] = None,
+    ) -> List[Set[Tuple[int, int]]]:
+        """Answer a batch of queries; results match per-query :meth:`eval`.
+
+        Queries sharing a plan (same normalized expr + traversal
+        direction) are coalesced into one multi-source batched BFS — the
+        leading batch axis of ``_bfs_batched`` — so a 64-request batch
+        with a hot expression costs one automaton, one pair of plane
+        tables, and ceil(64/source_batch) device dispatches instead of 64
+        of each.
+        """
+        V = self.graph.num_nodes
+        results: List[Optional[Set[Tuple[int, int]]]] = [None] * len(queries)
+        # (plan key, direction) -> list of (query index, start node)
+        groups: Dict[Tuple[str, str], List[Tuple[int, int]]] = {}
+        asts = []
+        for idx, q in enumerate(queries):
+            q = as_query(q)
+            ast = rx.parse(q.expr)
+            asts.append((q, ast))
+            if q.subject is None and q.obj is None:
+                results[idx] = self.eval(q.expr, limit=q.limit)
+            elif q.obj is not None:
+                # (x,E,o) and (s,E,o) both run backward from o
+                groups.setdefault((str(ast), "bwd"), []).append((idx, q.obj))
+            else:
+                groups.setdefault((str(ast), "fwd"), []).append((idx, q.subject))
+
+        for (key, direction), members in groups.items():
+            q0, ast0 = asts[members[0][0]]
+            plan = self._plan(ast0 if direction == "bwd"
+                              else rx.reverse(ast0))
+            hits = self._run_from_batched(plan, [m[1] for m in members],
+                                          batch_size=batch_size)
+            for bi, (idx, _start) in enumerate(members):
+                q, ast = asts[idx]
+                null = rx.nullable(ast)
+                out: Set[Tuple[int, int]] = set()
+                if q.subject is None:                      # (x, E, o)
+                    if null:
+                        out.add((q.obj, q.obj))
+                    out.update((int(s), q.obj) for s in np.nonzero(hits[bi])[0])
+                elif q.obj is None:                        # (s, E, y)
+                    if null:
+                        out.add((q.subject, q.subject))
+                    out.update((q.subject, int(o)) for o in np.nonzero(hits[bi])[0])
+                else:                                      # (s, E, o)
+                    if (null and q.subject == q.obj) or hits[bi][q.subject]:
+                        out.add((q.subject, q.obj))
+                if q.limit is not None and len(out) > q.limit:
+                    out = set(sorted(out)[: q.limit])
+                results[idx] = out
+        return results

@@ -30,8 +30,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .dense import DenseGraph, _plane_tables
+from .dense import DenseGraph, _plane_tables, _start_row
 from .glushkov import Glushkov
+
+
+def _resolve_shard_map():
+    """jax.shard_map graduated from jax.experimental between releases;
+    accept either spelling so the sharded BFS runs on old and new jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map
+    return shard_map
 
 
 @dataclass
@@ -103,7 +112,7 @@ def make_superstep(mesh: Mesh, data_axes: Tuple[str, ...], S: int):
     spec_rows = P(axes, None)
     spec_edges = P(axes, None)
     rep = P()
-    step = jax.shard_map(
+    step = _resolve_shard_map()(
         local_step,
         mesh=mesh,
         in_specs=(spec_rows, spec_rows, spec_edges, spec_edges, spec_edges, rep, rep),
@@ -145,10 +154,8 @@ class DistributedRPQ:
         B, PRED, _ = _plane_tables(g, dg.num_labels)
         B = jnp.concatenate([B, jnp.zeros((1, S), jnp.int8)])  # padding label
         Vp = sg.num_nodes_padded
-        D0 = g.F & ~1
-        frow = np.array([(D0 >> i) & 1 for i in range(S)], dtype=np.int8)
         planes = np.zeros((Vp, S), dtype=np.int8)
-        planes[np.asarray(start_objs)] = frow
+        planes[np.asarray(start_objs)] = _start_row(g)
 
         steps = max_steps if max_steps is not None else Vp * S + 1
         spec_rows = NamedSharding(self.mesh, P(self.data_axes, None))

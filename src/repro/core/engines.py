@@ -1,0 +1,110 @@
+"""Shared engine dispatch + the multi-query batch API.
+
+The serving surface the engines plug into:
+
+  * :class:`Query` — one 2RPQ request (expr + optional fixed endpoints);
+  * :class:`PlanCache` — per-engine automaton/plan cache keyed by the
+    *normalized* AST (``str(parse(expr))`` is canonical: the printer fully
+    parenthesizes, so ``a/b*`` and ``(a/(b)*)`` share one plan).  Repeated
+    and concurrent queries share Glushkov construction, B[v] mask tables
+    (ring) and bool-plane tables (dense);
+  * :func:`make_engine` / :func:`eval_many` — engine-agnostic entry
+    points: build either engine from a :class:`LabeledGraph` and answer a
+    batch of queries through its ``eval_many``.
+
+Both engines implement ``eval_many(queries) -> List[Set[(s, o)]]`` with
+results identical to per-query ``eval``; the dense engine additionally
+coalesces same-plan queries into one multi-source batched BFS.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from . import regex as rx
+
+
+@dataclass(frozen=True)
+class Query:
+    """One 2RPQ request; ``None`` endpoint = variable."""
+
+    expr: str
+    subject: Optional[int] = None
+    obj: Optional[int] = None
+    limit: Optional[int] = None
+
+
+QueryLike = Union[Query, str, Tuple]
+
+
+def as_query(q: QueryLike) -> Query:
+    """Accept Query | expr-string | (expr[, subject[, obj[, limit]]])."""
+    if isinstance(q, Query):
+        return q
+    if isinstance(q, str):
+        return Query(q)
+    return Query(*q)
+
+
+def normalized_key(expr: Union[str, rx.Node]) -> str:
+    """Canonical plan-cache key for an expression (parse + reprint)."""
+    ast = rx.parse(expr) if isinstance(expr, str) else expr
+    return str(ast)
+
+
+class PlanCache:
+    """Keyed memo of compiled query plans with hit/miss counters.
+
+    Values are engine-specific (ring: Glushkov + B[v] table; dense:
+    Glushkov + device plane tables) — the cache is just the sharing
+    policy, which both engines need identically.
+    """
+
+    def __init__(self, max_entries: int = 1024):
+        self.max_entries = max_entries
+        self._entries: Dict[Any, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Any, build: Callable[[], Any]) -> Any:
+        try:
+            plan = self._entries.pop(key)
+            self._entries[key] = plan  # re-insert: LRU recency refresh
+            self.hits += 1
+            return plan
+        except KeyError:
+            self.misses += 1
+            plan = build()
+            if len(self._entries) >= self.max_entries:
+                # evict the least recently used (dict preserves order)
+                self._entries.pop(next(iter(self._entries)))
+            self._entries[key] = plan
+            return plan
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+def make_engine(graph, kind: str = "ring", **kwargs):
+    """Build an RPQ engine over a :class:`LabeledGraph`.
+
+    ``kind``: "ring" (succinct, paper-faithful) or "dense" (TPU planes).
+    """
+    if kind == "ring":
+        from .ring import Ring
+        from .rpq import RingRPQ
+        return RingRPQ(Ring(graph), **kwargs)
+    if kind == "dense":
+        from .dense import DenseRPQ
+        return DenseRPQ(graph, **kwargs)
+    raise ValueError(f"unknown engine kind {kind!r}")
+
+
+def eval_many(engine, queries: Sequence[QueryLike]) -> List[Set[Tuple[int, int]]]:
+    """Answer a batch of queries on any engine exposing ``eval_many``."""
+    return engine.eval_many(queries)

@@ -128,6 +128,7 @@ class Glushkov:
     nullable: bool
     _tbl_fwd: List[np.ndarray] = field(default_factory=list, repr=False)
     _tbl_bwd: List[np.ndarray] = field(default_factory=list, repr=False)
+    _bwd_packed_cache: List[np.ndarray] = field(default_factory=list, repr=False)
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -255,6 +256,15 @@ class Glushkov:
     @property
     def nwords(self) -> int:
         return (self.m + 1 + 31) // 32
+
+    def packed_bwd(self) -> np.ndarray:
+        """uint32 [m+1, W] predecessor-mask matrix — the ``bwd`` operand of
+        the Pallas ``nfa_step`` kernel.  Cached: the wavefront traversal
+        calls this once per superstep."""
+        if not self._bwd_packed_cache:
+            self._bwd_packed_cache.append(
+                np.stack([_pack(m, self.nwords) for m in self.pred_mask]))
+        return self._bwd_packed_cache[0]
 
     def packed_tables(self, num_labels: int, label_id: Callable[[Label], int]):
         """Return (B_packed[num_labels, W], bwd_matrix[m+1, W],

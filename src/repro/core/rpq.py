@@ -1,17 +1,30 @@
 """Paper-faithful 2RPQ evaluation on the ring (Sec. 4).
 
-Backward traversal of the query-induced product subgraph G'_E: each BFS
-step starts at an L_p object range with a set D of active NFA states and
+Backward traversal of the query-induced product subgraph G'_E, organized
+as **frontier-synchronous wavefront supersteps**: each superstep takes the
+whole current frontier of (L_p range, D) entries and runs
 
-  part 1 (Sec. 4.1): enumerates the distinct predicates in the range via
+  part 1 (Sec. 4.1): enumerates the distinct predicates of every range via
      the L_p wavelet tree, pruning subtree v when D & B[v] == 0
-     (Fact 1 confines the symbol filter to B);
-  part 2 (Sec. 4.2): for each predicate, backward-search maps to an L_s
-     range; the L_s wavelet tree enumerates distinct subjects, pruning
-     with visited-state masks; D steps to T'[D & B[p]] *once per
-     predicate* (Fact 1 again — same D for every subject in the range);
+     (Fact 1 confines the symbol filter to B).  This produces the
+     superstep's *task list* — one (subject-range, D & B[p]) per
+     (entry, predicate) pair;
+  part 1.5: the bit-parallel transition D -> T'[D & B[p]] is applied to
+     the entire task list at once — either through the Pallas ``nfa_step``
+     kernel (one batched call on packed uint32 words) or scalar byte-split
+     tables for tiny wavefronts (``kernel_threshold``);
+  part 2 (Sec. 4.2): for each task, the L_s wavelet tree enumerates
+     distinct subjects, pruning with visited-state masks (D steps *once
+     per predicate* — Fact 1 again: same D for every subject in a range);
   part 3 (Sec. 4.3): each new subject s maps back to the object range
-     L_p[C_o[s] : C_o[s+1]) and is enqueued.
+     L_p[C_o[s] : C_o[s+1]) and joins the next wavefront.
+
+Task order within a superstep equals the FIFO order of the original
+per-entry deque, so visited-mask evolution — and therefore results and
+``QueryStats.node_state_activations`` — are identical to the sequential
+traversal (``wavefront=False`` processes one entry per superstep and is
+the reference).  Only part 1.5 is batched; its inputs depend on nothing
+mutable, which is what makes the phase split sound.
 
 A subject is reported when the initial NFA state activates.  Visited-mask
 soundness note: the paper stores at every internal L_s node v a mask D[v]
@@ -27,11 +40,12 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from . import regex as rx
+from .engines import PlanCache, QueryLike, as_query
 from .glushkov import Glushkov
 from .ring import Ring
 
@@ -46,14 +60,40 @@ class QueryStats:
     predicates_enumerated: int = 0
     subjects_enumerated: int = 0
     results: int = 0
+    supersteps: int = 0
+    kernel_batches: int = 0
+    kernel_tasks: int = 0
+
+
+@dataclass
+class _RingPlan:
+    """Compiled ring-side query plan: automaton + lazy B[v] mask table."""
+
+    g: Glushkov
+    Bv: Dict[Tuple[int, int], int]
 
 
 class RingRPQ:
-    """2RPQ engine over a :class:`Ring` (the paper's algorithm)."""
+    """2RPQ engine over a :class:`Ring` (the paper's algorithm).
 
-    def __init__(self, ring: Ring, paper_dv: bool = False):
+    ``wavefront=True`` (default) runs the superstep-batched traversal;
+    ``False`` processes one frontier entry at a time (the sequential
+    reference — same visit order, same results, same work counters).
+    ``kernel_threshold``: minimum wavefront task count that dispatches the
+    NFA transition through the Pallas kernel; ``None`` auto-resolves (on
+    TPU backends a small threshold, elsewhere scalar tables, which beat
+    interpret-mode kernels on the host).
+    """
+
+    def __init__(self, ring: Ring, paper_dv: bool = False,
+                 wavefront: bool = True,
+                 kernel_threshold: Optional[int] = None):
         self.ring = ring
         self.paper_dv = paper_dv
+        self.wavefront = wavefront
+        self.kernel_threshold = kernel_threshold
+        self.plans = PlanCache()
+        self._auto_threshold: Optional[float] = None
 
     # -- public API ----------------------------------------------------------
     def eval(
@@ -75,6 +115,34 @@ class RingRPQ:
         ast = rx.parse(expr)
         return self.eval_ast(ast, subject, obj, limit, stats, deadline_s)
 
+    def eval_many(
+        self,
+        queries: Sequence[QueryLike],
+        deadline_s: Optional[float] = None,
+        stats_out: Optional[List[QueryStats]] = None,
+    ) -> List[Set[Tuple[int, int]]]:
+        """Answer a batch of queries; results match per-query :meth:`eval`.
+
+        The batch shares this engine's plan cache (one Glushkov + B[v]
+        table per distinct normalized expression) and memoizes exact
+        duplicate requests within the batch.
+        """
+        out: List[Set[Tuple[int, int]]] = []
+        memo: Dict[Tuple, Set[Tuple[int, int]]] = {}
+        for q in queries:
+            q = as_query(q)
+            key = (q.expr, q.subject, q.obj, q.limit)
+            if key not in memo:
+                stats = QueryStats()
+                memo[key] = self.eval(q.expr, q.subject, q.obj, q.limit,
+                                      stats=stats, deadline_s=deadline_s)
+                if stats_out is not None:
+                    stats_out.append(stats)
+            elif stats_out is not None:
+                stats_out.append(QueryStats())
+            out.append(set(memo[key]))
+        return out
+
     def eval_ast(self, ast, subject=None, obj=None, limit=None, stats=None,
                  deadline_s=None):
         import time as _time
@@ -91,15 +159,15 @@ class RingRPQ:
                 out.update((v, v) for v in range(V))
             # phase 1: from the full L_p range, find subjects reaching
             # *some* object...
-            g_bwd = self._automaton(ast)
+            p_bwd = self._plan(ast)
             sources = self._traverse(
-                g_bwd, start_obj=None, stats=stats, collect="subjects"
+                p_bwd, start_obj=None, stats=stats, collect="subjects"
             )
             # phase 2: from each such subject, run (s, E, y)
-            g_fwd = self._automaton(rx.reverse(ast))
+            p_fwd = self._plan(rx.reverse(ast))
             for s in sorted(sources):
                 objs = self._traverse(
-                    g_fwd, start_obj=s, stats=stats, collect="subjects"
+                    p_fwd, start_obj=s, stats=stats, collect="subjects"
                 )
                 out.update((s, o) for o in objs)
                 if limit is not None and len(out) >= limit:
@@ -108,16 +176,16 @@ class RingRPQ:
             # (x, E, o): backward from o
             if null:
                 out.add((obj, obj))
-            g_bwd = self._automaton(ast)
-            srcs = self._traverse(g_bwd, start_obj=obj, stats=stats,
+            p_bwd = self._plan(ast)
+            srcs = self._traverse(p_bwd, start_obj=obj, stats=stats,
                                   collect="subjects", limit=limit)
             out.update((s, obj) for s in srcs)
         elif obj is None:
             # (s, E, y) == (y, ^E, s) backward from s
             if null:
                 out.add((subject, subject))
-            g_fwd = self._automaton(rx.reverse(ast))
-            objs = self._traverse(g_fwd, start_obj=subject, stats=stats,
+            p_fwd = self._plan(rx.reverse(ast))
+            objs = self._traverse(p_fwd, start_obj=subject, stats=stats,
                                   collect="subjects", limit=limit)
             out.update((subject, o) for o in objs)
         else:
@@ -128,13 +196,13 @@ class RingRPQ:
             if null and subject == obj:
                 out.add((subject, obj))
             else:
-                g_bwd = self._automaton(ast)
-                g_fwd = self._automaton(rx.reverse(ast))
-                if self._start_cost(g_bwd) <= self._start_cost(g_fwd):
-                    g, start, tgt = g_bwd, obj, subject
+                p_bwd = self._plan(ast)
+                p_fwd = self._plan(rx.reverse(ast))
+                if self._start_cost(p_bwd.g) <= self._start_cost(p_fwd.g):
+                    p, start, tgt = p_bwd, obj, subject
                 else:
-                    g, start, tgt = g_fwd, subject, obj
-                found = self._traverse(g, start_obj=start, stats=stats,
+                    p, start, tgt = p_fwd, subject, obj
+                found = self._traverse(p, start_obj=start, stats=stats,
                                        collect="subjects", target=tgt)
                 if tgt in found:
                     out.add((subject, obj))
@@ -170,6 +238,16 @@ class RingRPQ:
 
         return Glushkov.from_ast(ast, resolve)
 
+    def _plan(self, ast) -> _RingPlan:
+        """Automaton + B[v] table for ``ast``, shared via the plan cache
+        (keyed by the canonical printed AST)."""
+
+        def build():
+            g = self._automaton(ast)
+            return _RingPlan(g=g, Bv=self._build_Bv(g))
+
+        return self.plans.get(str(ast), build)
+
     def _build_Bv(self, g: Glushkov) -> Dict[Tuple[int, int], int]:
         """Sparse B[v] masks for the L_p wavelet-tree nodes (Sec. 4.1):
         B[v] = OR of B[p] for query predicates p below v.  Lazy: only
@@ -184,19 +262,60 @@ class RingRPQ:
                 Bv[key] = Bv.get(key, 0) | mask
         return Bv
 
+    # -- wavefront transition batching -----------------------------------------
+    def _resolve_threshold(self) -> float:
+        if self.kernel_threshold is not None:
+            return self.kernel_threshold
+        if self._auto_threshold is None:
+            try:
+                import jax
+                on_tpu = jax.default_backend() == "tpu"
+            except Exception:
+                on_tpu = False
+            # interpret-mode Pallas on the host loses to the byte-split
+            # tables at any size; on TPU the kernel pays off quickly
+            self._auto_threshold = 64.0 if on_tpu else float("inf")
+        return self._auto_threshold
+
+    def _transition_batch(self, g: Glushkov, masks: List[int],
+                          stats: QueryStats) -> List[int]:
+        """T'[mask] for every wavefront task — one Pallas ``nfa_step`` call
+        for the whole batch, or scalar byte-split tables below threshold."""
+        if not masks:
+            return []
+        if len(masks) < self._resolve_threshold():
+            return [g.Tp(m) for m in masks]
+        from ..kernels import ops
+        W = g.nwords
+        X = np.zeros((len(masks), W), dtype=np.uint32)
+        for i, m in enumerate(masks):
+            for w in range(W):
+                X[i, w] = (m >> (32 * w)) & 0xFFFFFFFF
+        Y = np.asarray(ops.nfa_step(X, g.packed_bwd()))
+        stats.kernel_batches += 1
+        stats.kernel_tasks += len(masks)
+        out = []
+        for i in range(len(masks)):
+            acc = 0
+            for w in range(W):
+                acc |= int(Y[i, w]) << (32 * w)
+            out.append(acc)
+        return out
+
     def _traverse(
         self,
-        g: Glushkov,
+        plan: _RingPlan,
         start_obj: Optional[int],
         stats: QueryStats,
         collect: str = "subjects",
         target: Optional[int] = None,
         limit: Optional[int] = None,
     ) -> Set[int]:
-        """Backward BFS (Secs. 4.1–4.3).  ``start_obj=None`` starts from the
-        full L_p range (Sec. 4.4).  Returns reported subjects."""
+        """Backward wavefront BFS (Secs. 4.1–4.3).  ``start_obj=None``
+        starts from the full L_p range (Sec. 4.4).  Returns reported
+        subjects."""
         ring = self.ring
-        Bv = self._build_Bv(g)
+        g, Bv = plan.g, plan.Bv
         wt_p, wt_s = ring.wt_p, ring.wt_s
         s_levels = wt_s.levels
         INIT = g.initial
@@ -218,30 +337,49 @@ class RingRPQ:
         import time as _time
         deadline = getattr(self, "_deadline", None)
         while queue:
-            (b, e), D = queue.popleft()
-            if e <= b:
-                continue
-            stats.bfs_steps += 1
-            if deadline is not None and stats.bfs_steps % 64 == 0 \
-                    and _time.time() > deadline:
-                raise TimeoutError("query deadline exceeded")
+            if self.wavefront:
+                chunk = list(queue)
+                queue.clear()
+            else:
+                chunk = [queue.popleft()]
+            stats.supersteps += 1
 
-            # ---- part 1: distinct predicates with D & B[p] != 0 ----
-            def prune_p(l, prefix, covered, D=D):
-                stats.wt_nodes_visited += 1
-                return (D & Bv.get((l, prefix), 0)) == 0
+            # ---- part 1: distinct predicates with D & B[p] != 0, over the
+            # whole chunk — yields the superstep's task list ----
+            tasks: List[Tuple[int, int, int]] = []  # (sb, se, D & B[p])
+            for (b, e), D in chunk:
+                if e <= b:
+                    continue
+                stats.bfs_steps += 1
+                if deadline is not None and stats.bfs_steps % 64 == 0 \
+                        and _time.time() > deadline:
+                    raise TimeoutError("query deadline exceeded")
 
-            for p, rb, re_ in wt_p.range_distinct(b, e, prune=prune_p):
-                stats.predicates_enumerated += 1
-                Dstep = g.Tp(D & g.B.get(p, 0))
+                def prune_p(l, prefix, covered, D=D):
+                    stats.wt_nodes_visited += 1
+                    return (D & Bv.get((l, prefix), 0)) == 0
+
+                for p, rb, re_ in wt_p.range_distinct(b, e, prune=prune_p):
+                    stats.predicates_enumerated += 1
+                    masked = D & g.B.get(p, 0)
+                    if masked == 0:
+                        continue
+                    sb = int(ring.C_p[p]) + rb
+                    se = int(ring.C_p[p]) + re_
+                    if se <= sb:
+                        continue
+                    tasks.append((sb, se, masked))
+
+            # ---- part 1.5: bit-parallel D-step for every task at once ----
+            steps = self._transition_batch(g, [t[2] for t in tasks], stats)
+
+            # ---- parts 2+3, in task order (== the sequential FIFO order,
+            # so the visited-mask evolution is identical) ----
+            next_front: List[Tuple[Tuple[int, int], int]] = []
+            for (sb, se, _masked), Dstep in zip(tasks, steps):
                 if Dstep == 0:
                     continue
-                sb = int(ring.C_p[p]) + rb
-                se = int(ring.C_p[p]) + re_
-                if se <= sb:
-                    continue
 
-                # ---- part 2: distinct unvisited subjects ----
                 def prune_s(l, prefix, covered, Dstep=Dstep):
                     stats.wt_nodes_visited += 1
                     if l == s_levels:
@@ -271,5 +409,6 @@ class RingRPQ:
                         if limit is not None and len(reported) >= limit:
                             return reported
                     # ---- part 3: subject becomes the next object range ----
-                    queue.append((ring.object_range(s), Dnew))
+                    next_front.append((ring.object_range(s), Dnew))
+            queue.extend(next_front)
         return reported

@@ -1,0 +1,82 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The test suite uses a small slice of the hypothesis API
+(``@given``/``@settings`` with ``strategies.integers``).  When the real
+package is installed we simply re-export it; otherwise a minimal
+deterministic stand-in runs each property test over a fixed set of
+examples (boundary values first, then seeded-random draws).  That keeps
+the properties exercised — with reproducible inputs — in environments
+where hypothesis cannot be installed.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+try:  # prefer the real thing when present
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 12
+
+    class _IntegersStrategy:
+        """Deterministic stand-in for ``strategies.integers(lo, hi)``."""
+
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def example(self, i: int, rnd: random.Random) -> int:
+            # boundary values first, then seeded-random interior draws
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rnd.randint(self.lo, self.hi)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+            return _IntegersStrategy(min_value, max_value)
+
+    strategies = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        """Records ``max_examples``; other knobs (deadline, ...) are no-ops
+        here since the shim never shrinks or times out."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats: _IntegersStrategy):
+        def deco(fn):
+            # no functools.wraps: __wrapped__ would make pytest resolve the
+            # original signature and demand fixtures for the strategy args
+            def runner(*args, **kwargs):
+                n = min(getattr(runner, "_shim_max_examples",
+                                _DEFAULT_EXAMPLES), _DEFAULT_EXAMPLES)
+                # per-test deterministic seed, stable across processes
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rnd = random.Random(seed)
+                for i in range(n):
+                    vals = [s.example(i, rnd) for s in strats]
+                    fn(*args, *vals, **kwargs)
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

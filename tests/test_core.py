@@ -5,7 +5,11 @@ import re as pyre
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
 
 from helpers import rand_expr_ast
 from repro.core import regex as rx

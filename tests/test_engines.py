@@ -11,11 +11,12 @@ import pytest
 from helpers import rand_expr_ast
 from repro.core import regex as rx
 from repro.core.dense import DenseGraph, DenseRPQ
+from repro.core.engines import Query, eval_many, make_engine
 from repro.core.fixtures import metro_graph, random_graph
 from repro.core.oracle import eval_oracle
 from repro.core.packed import answers_from_visited, packed_bfs
 from repro.core.ring import Ring
-from repro.core.rpq import RingRPQ
+from repro.core.rpq import QueryStats, RingRPQ
 
 
 def test_dense_metro():
@@ -69,6 +70,106 @@ def test_packed_matches_dense():
             want.discard(0)
             have.discard(0)
         assert have == want, str(ast)
+
+
+def _mixed_queries(rnd, num_preds, num_nodes, n):
+    out = []
+    for i in range(n):
+        expr = str(rand_expr_ast(rnd, 2, num_preds))
+        kind = i % 4
+        if kind == 0:
+            out.append(Query(expr))
+        elif kind == 1:
+            out.append(Query(expr, obj=rnd.randrange(num_nodes)))
+        elif kind == 2:
+            out.append(Query(expr, subject=rnd.randrange(num_nodes)))
+        else:
+            out.append(Query(expr, subject=rnd.randrange(num_nodes),
+                             obj=rnd.randrange(num_nodes)))
+    return out
+
+
+def test_eval_many_ring_dense_oracle_agree():
+    """eval_many == per-query eval == oracle, on both engines, across all
+    four query shapes (including duplicates, which eval_many memoizes)."""
+    rnd = random.Random(77)
+    g = random_graph(12, 3, 40, seed=6, pred_zipf=False)
+    ring_eng = make_engine(g, "ring")
+    dense_eng = make_engine(g, "dense")
+    queries = _mixed_queries(rnd, 3, 12, 24)
+    queries.append(queries[1])  # exact duplicate exercises the batch memo
+    r_ring = eval_many(ring_eng, queries)
+    r_dense = eval_many(dense_eng, queries)
+    for q, a, b in zip(queries, r_ring, r_dense):
+        want = eval_oracle(g, q.expr, subject=q.subject, obj=q.obj)
+        assert a == want, (q,)
+        assert b == want, (q,)
+        assert ring_eng.eval(q.expr, q.subject, q.obj) == a, (q,)
+        assert dense_eng.eval(q.expr, q.subject, q.obj) == b, (q,)
+
+
+def test_eval_many_metro_hot_expr_batch():
+    """Serving shape: one hot expression, many endpoints, both engines."""
+    g = metro_graph()
+    queries = [Query("l5+/bus", obj=o) for o in range(g.num_nodes)]
+    ring_res = make_engine(g, "ring").eval_many(queries)
+    dense_res = make_engine(g, "dense").eval_many(queries)
+    assert ring_res == dense_res
+    assert any(r for r in ring_res)  # the worked example has answers
+
+
+def test_wavefront_matches_sequential_traversal():
+    """The superstep-batched traversal must report the same answers AND do
+    the same Theorem-4.1 work (node_state_activations) as the per-entry
+    sequential traversal — with the scalar tables and with the transition
+    forced through the Pallas nfa_step kernel (kernel_threshold=1)."""
+    rnd = random.Random(13)
+    for trial in range(8):
+        V, P, E = rnd.randrange(4, 12), rnd.randrange(1, 4), rnd.randrange(5, 30)
+        g = random_graph(V, P, E, seed=trial + 900, pred_zipf=False)
+        ring = Ring(g)
+        engines = {
+            "wavefront": RingRPQ(ring),
+            "sequential": RingRPQ(ring, wavefront=False),
+            "kernel": RingRPQ(ring, kernel_threshold=1),
+        }
+        expr = str(rand_expr_ast(rnd, 2, P))
+        for (sub, ob) in [(None, 0), (0, None), (None, None)]:
+            runs = {}
+            for name, eng in engines.items():
+                stats = QueryStats()
+                res = eng.eval(expr, subject=sub, obj=ob, stats=stats)
+                runs[name] = (res, stats.node_state_activations)
+            ref = runs["sequential"]
+            assert runs["wavefront"] == ref, (expr, sub, ob)
+            assert runs["kernel"] == ref, (expr, sub, ob)
+
+
+def test_wavefront_kernel_path_fires():
+    """kernel_threshold=1 must actually dispatch through the Pallas kernel
+    (guards against the fallback silently swallowing the batched path)."""
+    g = metro_graph()
+    eng = RingRPQ(Ring(g), kernel_threshold=1)
+    stats = QueryStats()
+    eng.eval("l5+/bus", stats=stats)
+    assert stats.kernel_batches > 0
+    assert stats.kernel_tasks > 0
+
+
+def test_plan_cache_shares_automata():
+    g = metro_graph()
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        eng.eval("l5+/bus", obj=0)
+        assert eng.plans.misses >= 1
+        h0 = eng.plans.hits
+        eng.eval_many([Query("l5+/bus", obj=o) for o in range(3)])
+        assert eng.plans.hits > h0, kind
+        assert eng.plans.misses <= 2, kind  # fwd+bwd plans only, never rebuilt
+        # normalization: a reparenthesized spelling shares the plan
+        m0 = eng.plans.misses
+        eng.eval("(l5)+/(bus)", obj=0)
+        assert eng.plans.misses == m0, kind
 
 
 def test_distributed_multidevice_subprocess():
