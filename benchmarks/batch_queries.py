@@ -2,19 +2,31 @@
 
     PYTHONPATH=src python -m benchmarks.batch_queries
 
-Serving-shaped synthetic workload: a few hot expressions, each requested
-with many different fixed objects.  The looped baseline answers each
-request in isolation — the plan cache is cleared between calls, which is
-exactly what the pre-batch-API engines did (every ``eval`` rebuilt its
-automaton and tables).  ``eval_many`` shares plans across the batch and
-(dense engine) coalesces same-plan requests into one multi-source BFS.
+Serving-shaped synthetic workloads:
 
-Reported: queries/sec for both paths at batch sizes 1/8/64, and the
-batched-over-looped speedup.  jit compilation is warmed up out-of-band so
-both sides measure steady-state throughput.
+  * **hot** — a few hot expressions, each requested with many different
+    fixed objects (same-plan coalescing, the PR 1 shape);
+  * **hetero** — a *mixed-expression* stream: 16 expressions of varying
+    automaton size cycling through the batch, so ``eval_many`` has to
+    bundle different plans into padded batched BFS dispatches;
+  * **result cache replay** — the same batch served twice: the second
+    pass answers every request from the cross-request result cache.
+
+The looped baseline answers each request in isolation — the plan cache
+is cleared between calls, which is exactly what the pre-batch-API
+engines did (every ``eval`` rebuilt its automaton and tables).  The
+batched side clears the *result* cache between reps so it measures cold
+evaluation, not replay (replay is measured separately).
+
+Reported: queries/sec for both paths at batch sizes 1/8/64, the
+batched-over-looped speedup per workload, and the cache replay speedup.
+jit compilation is warmed up out-of-band so both sides measure
+steady-state throughput.  ``BENCH_SMOKE=1`` (or ``run.py --smoke``)
+shrinks the graph and batch ladder for CI smoke runs.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Tuple
 
@@ -23,18 +35,29 @@ import numpy as np
 from repro.core.engines import Query, make_engine
 from repro.core.fixtures import scale_free_graph
 
-BATCH_SIZES = (1, 8, 64)
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+
+BATCH_SIZES = (1, 8, 64) if not SMOKE else (1, 8)
 HOT_EXPRS = ["0/1*", "(0|2)+", "^1/0*", "3/2*/1"]
+# mixed-automaton stream: state counts m+1 from 2 up to 8 so the padded
+# buckets actually differ (dense pads to pow2 widths with a floor of 4,
+# so these land in buckets 4 and 8)
+HETERO_EXPRS = [
+    "0", "1", "^2", "3*",
+    "0/1", "(0|2)", "2+/3", "^1/0*",
+    "0/1*/2", "(0|3)/2", "(0/1)|(2/3)", "1+/2+/3",
+    "0/1/2/3*", "(0|1)/(2|3)+", "^3/2/1/0", "(0/1/2)|(3/2/1)",
+]
 # dispatch-overhead-dominated scale: this is where per-request isolation
 # hurts most and where the batch axis pays (larger graphs shift the time
 # into the BFS itself, which both paths share)
-V, P, E = 300, 8, 2400
-REPS = 3
+V, P, E = (300, 8, 2400) if not SMOKE else (120, 8, 900)
+REPS = 3 if not SMOKE else 1
 
 
-def _workload(n: int, seed: int = 0) -> List[Query]:
+def _workload(exprs: List[str], n: int, seed: int = 0) -> List[Query]:
     rng = np.random.default_rng(seed)
-    return [Query(HOT_EXPRS[i % len(HOT_EXPRS)], obj=int(o))
+    return [Query(exprs[i % len(exprs)], obj=int(o))
             for i, o in enumerate(rng.integers(0, V, n))]
 
 
@@ -52,36 +75,67 @@ def _time_looped(eng, queries: List[Query]) -> float:
 def _time_batched(eng, queries: List[Query]) -> float:
     best = float("inf")
     for _ in range(REPS):
+        eng.results.clear()  # measure cold evaluation, not cache replay
         t0 = time.perf_counter()
         eng.eval_many(queries)
         best = min(best, time.perf_counter() - t0)
     return best
 
 
+def _time_replay(eng, queries: List[Query]) -> Tuple[float, float]:
+    """(cold, warm) seconds for the same batch: warm is a pure
+    result-cache replay."""
+    cold = warm = float("inf")
+    for _ in range(REPS):
+        eng.results.clear()
+        t0 = time.perf_counter()
+        eng.eval_many(queries)
+        cold = min(cold, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        eng.eval_many(queries)
+        warm = min(warm, time.perf_counter() - t0)
+    return cold, warm
+
+
 def run() -> List[Tuple[str, float]]:
     g = scale_free_graph(V, P, E, seed=17)
     rows: List[Tuple[str, float]] = []
-    speedup64 = {}
+    speedup64 = {"hot": {}, "hetero": {}}
     for kind in ("dense", "ring"):
         eng = make_engine(g, kind)
-        for bs in BATCH_SIZES:
-            queries = _workload(bs, seed=bs)
-            # warm up jit + verify agreement once, untimed
-            batched = eng.eval_many(queries)
-            looped = [eng.eval(q.expr, q.subject, q.obj) for q in queries]
-            assert batched == looped, f"{kind} eval_many != eval at bs={bs}"
-            t_loop = _time_looped(eng, queries)
-            t_batch = _time_batched(eng, queries)
-            rows.append((f"batch_queries/{kind}/bs{bs}/looped_qps",
-                         bs / t_loop))
-            rows.append((f"batch_queries/{kind}/bs{bs}/eval_many_qps",
-                         bs / t_batch))
-            rows.append((f"batch_queries/{kind}/bs{bs}/speedup",
-                         t_loop / t_batch))
-            if bs == 64:
-                speedup64[kind] = t_loop / t_batch
-    rows.append(("batch_queries/best_bs64_speedup",
-                 max(speedup64.values())))
+        for wl_name, exprs in (("hot", HOT_EXPRS), ("hetero", HETERO_EXPRS)):
+            for bs in BATCH_SIZES:
+                queries = _workload(exprs, bs, seed=bs)
+                # warm up jit + verify agreement once, untimed
+                batched = eng.eval_many(queries)
+                looped = [eng.eval(q.expr, q.subject, q.obj) for q in queries]
+                assert batched == looped, \
+                    f"{kind}/{wl_name} eval_many != eval at bs={bs}"
+                t_loop = _time_looped(eng, queries)
+                t_batch = _time_batched(eng, queries)
+                tag = f"batch_queries/{kind}/{wl_name}_bs{bs}"
+                rows.append((f"{tag}/looped_qps", bs / t_loop))
+                rows.append((f"{tag}/eval_many_qps", bs / t_batch))
+                rows.append((f"{tag}/speedup", t_loop / t_batch))
+                if bs == max(BATCH_SIZES):
+                    speedup64[wl_name][kind] = t_loop / t_batch
+        # result-cache replay at the largest batch, mixed expressions
+        queries = _workload(HETERO_EXPRS, max(BATCH_SIZES), seed=99)
+        eng.eval_many(queries)  # warm jit
+        cold, warm = _time_replay(eng, queries)
+        rows.append((f"batch_queries/{kind}/cache_replay/cold_qps",
+                     len(queries) / cold))
+        rows.append((f"batch_queries/{kind}/cache_replay/replay_qps",
+                     len(queries) / warm))
+        rows.append((f"batch_queries/{kind}/cache_replay/speedup",
+                     cold / warm))
+    # label with the actual top batch size so smoke rows (bs8) are never
+    # mistaken for full-scale bs64 numbers in the accumulated artifacts
+    top = max(BATCH_SIZES)
+    rows.append((f"batch_queries/best_bs{top}_speedup",
+                 max(speedup64["hot"].values())))
+    rows.append((f"batch_queries/hetero_best_bs{top}_speedup",
+                 max(speedup64["hetero"].values())))
     return rows
 
 

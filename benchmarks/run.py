@@ -1,14 +1,23 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only space,query_time,...]
+                                            [--smoke] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV (derived = the value when the row
 is not a latency).  Roofline terms come from the dry-run artifacts
 (see launch/roofline.py), re-emitted here for one-stop reporting.
+
+``--smoke`` sets ``BENCH_SMOKE=1`` before the suites import, shrinking
+fixtures for CI smoke runs; ``--json PATH`` additionally writes all rows
+(plus per-suite wall time and errors) as a JSON document — the CI
+workflow uploads it as the ``BENCH_smoke.json`` artifact so the perf
+trajectory accumulates across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -51,8 +60,15 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixtures (sets BENCH_SMOKE=1 for the suites)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write rows as a JSON document")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
     picks = args.only.split(",") if args.only else list(SUITES)
+    doc = {"smoke": bool(args.smoke), "suites": {}, "rows": {}}
     print("name,us_per_call,derived")
     for name in picks:
         t0 = time.time()
@@ -60,13 +76,21 @@ def main() -> None:
             rows = SUITES[name]()
         except Exception as e:  # a failed suite must not hide the others
             print(f"{name}/ERROR,,{type(e).__name__}:{e}")
+            doc["suites"][name] = {"error": f"{type(e).__name__}:{e}"}
             continue
         for key, val in rows:
+            doc["rows"][key] = float(val)
             if key.endswith("_us"):
                 print(f"{key},{val:.2f},")
             else:
                 print(f"{key},,{val}")
-        print(f"{name}/_suite_seconds,,{time.time()-t0:.1f}", flush=True)
+        dt = time.time() - t0
+        doc["suites"][name] = {"seconds": round(dt, 2)}
+        print(f"{name}/_suite_seconds,,{dt:.1f}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,15 @@ all-edge sweeps per superstep (tile slack — measured in benchmarks).
 Multi-source batching: a leading batch axis B turns (x,E,y) phase-2 into
 B simultaneous BFS runs — the TPU analogue of the wavelet tree working on
 a *range* of objects at once (Sec. 4.4).
+
+Heterogeneous batching (``eval_many``): queries with *different*
+automata also share the batch axis.  Each plan's bool-plane tables are
+padded to the bucket's state width (buckets quantize m+1 up to a power
+of two, so retracing stays bounded) and stacked: row r of the batch
+carries its own B[labels, S_pad] and PRED[S_pad, S_pad] operands, and one
+vmapped BFS (``_bfs_hetero``) runs every plan at once.  Padding states
+have empty B columns and zero PRED rows, so they can never activate —
+per-row results are bit-identical to a solo run.
 """
 from __future__ import annotations
 
@@ -40,7 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import regex as rx
-from .engines import PlanCache, QueryLike, as_query
+from .engines import (PlanCache, QueryLike, ResultCache, as_query,
+                      probe_result_cache, publish_result)
 from .glushkov import Glushkov
 from .ring import LabeledGraph
 
@@ -158,6 +168,19 @@ def _bfs_inner(subj, pred, obj, B, PRED, start_planes, num_nodes, max_steps):
     return out[1]
 
 
+@functools.partial(jax.jit, static_argnames=("num_nodes", "max_steps"))
+def _bfs_hetero(subj, pred, obj, Bstk, PREDstk, start_planes, num_nodes,
+                max_steps):
+    """Heterogeneous-plan batched BFS: row r runs its OWN automaton.
+    Bstk: [R, L, S_pad], PREDstk: [R, S_pad, S_pad],
+    start_planes: [R, V, S_pad] — one vmap over (tables, sources)."""
+    run = jax.vmap(
+        lambda B, PRED, sp: _bfs_inner(subj, pred, obj, B, PRED, sp,
+                                       num_nodes, max_steps)
+    )
+    return run(Bstk, PREDstk, start_planes)
+
+
 @dataclass
 class _DensePlan:
     """Compiled dense-side plan: automaton + device-resident bool-plane
@@ -166,16 +189,27 @@ class _DensePlan:
     g: Glushkov
     B: jnp.ndarray
     PRED: jnp.ndarray
+    _host: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    def host_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Host copies of (B, PRED) for hetero-stack assembly, fetched
+        from device once per plan instead of once per batch row."""
+        if self._host is None:
+            self._host = (np.asarray(self.B), np.asarray(self.PRED))
+        return self._host
 
 
 class DenseRPQ:
     """Dense-engine 2RPQ evaluation with RingRPQ-identical semantics."""
 
-    def __init__(self, graph: LabeledGraph, source_batch: int = 16):
+    def __init__(self, graph: LabeledGraph, source_batch: int = 16,
+                 result_cache: Optional[ResultCache] = None):
         self.graph = graph
         self.dg = DenseGraph.from_graph(graph)
         self.source_batch = source_batch
         self.plans = PlanCache()
+        self.results = result_cache if result_cache is not None else ResultCache()
+        self.hetero_dispatches = 0   # _bfs_hetero device calls
 
     def _automaton(self, ast) -> Glushkov:
         g = self.graph
@@ -249,6 +283,65 @@ class DenseRPQ:
             hits[i : i + len(chunk)] = np.asarray(visited[:, :, 0]) > 0
         return hits
 
+    @staticmethod
+    def _pad_width(S: int) -> int:
+        """Bucket state width: next power of two (min 4), so mixed-size
+        automata share compiled BFS shapes instead of retracing per m."""
+        w = 4
+        while w < S:
+            w *= 2
+        return w
+
+    def _run_hetero_rows(
+        self,
+        rows: Sequence[Tuple[_DensePlan, int]],
+        batch_size: Optional[int] = None,
+    ) -> np.ndarray:
+        """Heterogeneous multi-plan batched BFS: row i runs ``rows[i] =
+        (plan, start node)`` with its own padded plane tables.  Returns
+        bool[len(rows), V] hit planes (initial-state activations).
+
+        Rows bucket by padded state width; each bucket stacks per-row
+        B/PRED tables and start planes and dispatches ``_bfs_hetero`` in
+        ``source_batch`` chunks, the tail chunk zero-padded so compiled
+        shapes are reused across batches."""
+        V = self.graph.num_nodes
+        hits = np.zeros((len(rows), V), dtype=bool)
+        if not rows:
+            return hits
+        dg = self.dg
+        L = dg.num_labels
+        Bsz = batch_size or self.source_batch
+        buckets: Dict[int, List[int]] = {}
+        for i, (plan, _start) in enumerate(rows):
+            buckets.setdefault(self._pad_width(plan.g.m + 1), []).append(i)
+        for S_pad, members in buckets.items():
+            for c0 in range(0, len(members), Bsz):
+                chunk = members[c0 : c0 + Bsz]
+                R = len(chunk)
+                Bstk = np.zeros((Bsz, L, S_pad), dtype=np.int8)
+                PREDstk = np.zeros((Bsz, S_pad, S_pad), dtype=np.int8)
+                planes = np.zeros((Bsz, V, S_pad), dtype=np.int8)
+                for r, i in enumerate(chunk):
+                    plan, start = rows[i]
+                    S = plan.g.m + 1
+                    if plan.g.F & ~1 == 0:
+                        continue  # no reachable final state: row stays empty
+                    B_host, PRED_host = plan.host_tables()
+                    Bstk[r, :, :S] = B_host
+                    PREDstk[r, :S, :S] = PRED_host
+                    planes[r, start, :S] = _start_row(plan.g)
+                visited = _bfs_hetero(
+                    dg.subj, dg.pred, dg.obj, jnp.asarray(Bstk),
+                    jnp.asarray(PREDstk), jnp.asarray(planes),
+                    V, V * S_pad + 1,
+                )
+                self.hetero_dispatches += 1
+                vis0 = np.asarray(visited[:R, :, 0]) > 0
+                for r, i in enumerate(chunk):
+                    hits[i] = vis0[r]
+        return hits
+
     def eval(
         self,
         expr: str,
@@ -299,52 +392,61 @@ class DenseRPQ:
     ) -> List[Set[Tuple[int, int]]]:
         """Answer a batch of queries; results match per-query :meth:`eval`.
 
-        Queries sharing a plan (same normalized expr + traversal
-        direction) are coalesced into one multi-source batched BFS — the
-        leading batch axis of ``_bfs_batched`` — so a 64-request batch
-        with a hot expression costs one automaton, one pair of plane
-        tables, and ceil(64/source_batch) device dispatches instead of 64
-        of each.
+        Every fixed-endpoint query becomes one row of a multi-source
+        batched BFS — *including queries with different automata*: a
+        single-plan batch reuses the shared-table fast path
+        (``_bfs_batched``), a mixed batch stacks per-row padded plane
+        tables and runs ``_bfs_hetero``, so a 64-request batch over 16
+        expressions costs 16 plan compilations and a handful of device
+        dispatches instead of 64 of each.  Finished answers land in the
+        cross-request :class:`ResultCache`; replayed requests (and
+        duplicates within the batch) skip evaluation entirely.
         """
-        V = self.graph.num_nodes
-        results: List[Optional[Set[Tuple[int, int]]]] = [None] * len(queries)
-        # (plan key, direction) -> list of (query index, start node)
-        groups: Dict[Tuple[str, str], List[Tuple[int, int]]] = {}
-        asts = []
-        for idx, q in enumerate(queries):
-            q = as_query(q)
+        qs = [as_query(q) for q in queries]
+        results: List[Optional[Set[Tuple[int, int]]]] = [None] * len(qs)
+        pending = probe_result_cache(self.results, qs, results)
+
+        rows: List[Tuple[_DensePlan, int]] = []
+        row_info: List[Tuple[Tuple, "rx.Node"]] = []  # (cache key, ast)
+        for key, idxs in pending.items():
+            q = qs[idxs[0]]
             ast = rx.parse(q.expr)
-            asts.append((q, ast))
             if q.subject is None and q.obj is None:
-                results[idx] = self.eval(q.expr, limit=q.limit)
+                res = self.eval(q.expr, limit=q.limit)
+                publish_result(self.results, key, res, idxs, results)
             elif q.obj is not None:
                 # (x,E,o) and (s,E,o) both run backward from o
-                groups.setdefault((str(ast), "bwd"), []).append((idx, q.obj))
-            else:
-                groups.setdefault((str(ast), "fwd"), []).append((idx, q.subject))
+                rows.append((self._plan(ast), q.obj))
+                row_info.append((key, ast))
+            else:                                          # (s, E, y)
+                rows.append((self._plan(rx.reverse(ast)), q.subject))
+                row_info.append((key, ast))
 
-        for (key, direction), members in groups.items():
-            q0, ast0 = asts[members[0][0]]
-            plan = self._plan(ast0 if direction == "bwd"
-                              else rx.reverse(ast0))
-            hits = self._run_from_batched(plan, [m[1] for m in members],
-                                          batch_size=batch_size)
-            for bi, (idx, _start) in enumerate(members):
-                q, ast = asts[idx]
-                null = rx.nullable(ast)
-                out: Set[Tuple[int, int]] = set()
-                if q.subject is None:                      # (x, E, o)
-                    if null:
-                        out.add((q.obj, q.obj))
-                    out.update((int(s), q.obj) for s in np.nonzero(hits[bi])[0])
-                elif q.obj is None:                        # (s, E, y)
-                    if null:
-                        out.add((q.subject, q.subject))
-                    out.update((q.subject, int(o)) for o in np.nonzero(hits[bi])[0])
-                else:                                      # (s, E, o)
-                    if (null and q.subject == q.obj) or hits[bi][q.subject]:
-                        out.add((q.subject, q.obj))
-                if q.limit is not None and len(out) > q.limit:
-                    out = set(sorted(out)[: q.limit])
-                results[idx] = out
+        if rows:
+            distinct = {id(plan) for plan, _ in rows}
+            if len(distinct) == 1:
+                hits = self._run_from_batched(rows[0][0],
+                                              [start for _, start in rows],
+                                              batch_size=batch_size)
+            else:
+                hits = self._run_hetero_rows(rows, batch_size=batch_size)
+        for bi, (key, ast) in enumerate(row_info):
+            idxs = pending[key]
+            q = qs[idxs[0]]
+            null = rx.nullable(ast)
+            out: Set[Tuple[int, int]] = set()
+            if q.subject is None:                          # (x, E, o)
+                if null:
+                    out.add((q.obj, q.obj))
+                out.update((int(s), q.obj) for s in np.nonzero(hits[bi])[0])
+            elif q.obj is None:                            # (s, E, y)
+                if null:
+                    out.add((q.subject, q.subject))
+                out.update((q.subject, int(o)) for o in np.nonzero(hits[bi])[0])
+            else:                                          # (s, E, o)
+                if (null and q.subject == q.obj) or hits[bi][q.subject]:
+                    out.add((q.subject, q.obj))
+            if q.limit is not None and len(out) > q.limit:
+                out = set(sorted(out)[: q.limit])
+            publish_result(self.results, key, out, idxs, results)
         return results

@@ -8,17 +8,28 @@ The serving surface the engines plug into:
     parenthesizes, so ``a/b*`` and ``(a/(b)*)`` share one plan).  Repeated
     and concurrent queries share Glushkov construction, B[v] mask tables
     (ring) and bool-plane tables (dense);
+  * :class:`ResultCache` — cross-request memo of *finished answers*,
+    keyed by normalized AST + endpoint binding, LRU with size/TTL bounds.
+    A replayed request skips evaluation entirely;
+  * :class:`PlanBundle` — the packing that lets ``eval_many`` batch
+    queries with *different* automata: plans are laid out block-diagonally
+    in one shared state space (distinct automata compose into one
+    block-diagonal transition structure, so a single bit-parallel step —
+    or one padded dense BFS — serves every plan at once);
   * :func:`make_engine` / :func:`eval_many` — engine-agnostic entry
     points: build either engine from a :class:`LabeledGraph` and answer a
     batch of queries through its ``eval_many``.
 
 Both engines implement ``eval_many(queries) -> List[Set[(s, o)]]`` with
-results identical to per-query ``eval``; the dense engine additionally
-coalesces same-plan queries into one multi-source batched BFS.
+results identical to per-query ``eval``; both coalesce mixed-automaton
+batches (dense: padded stacked plane tables, one vmapped BFS per state
+bucket; ring: one wavefront superstep stream whose task list carries a
+plan id, stepped through a single block-diagonal ``nfa_step`` batch).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from . import regex as rx
@@ -52,12 +63,24 @@ def normalized_key(expr: Union[str, rx.Node]) -> str:
     return str(ast)
 
 
+_MISSING = object()
+
+
 class PlanCache:
-    """Keyed memo of compiled query plans with hit/miss counters.
+    """Keyed memo of compiled query plans with hit/miss/eviction counters.
 
     Values are engine-specific (ring: Glushkov + B[v] table; dense:
     Glushkov + device plane tables) — the cache is just the sharing
     policy, which both engines need identically.
+
+    Eviction accounting: a hit pops and re-inserts the entry *before*
+    returning, so an about-to-evict entry that gets hit is refreshed to
+    most-recently-used and a subsequent miss evicts the true LRU, never
+    the just-hit plan.  ``build`` may itself consult the cache (e.g. a
+    plan that compiles its reverse); the miss path re-checks for a
+    reentrant insert of the same key and keeps the size bound with an
+    eviction *loop*, so interleaved get/build sequences can never leave
+    more than ``max_entries`` entries behind.
     """
 
     def __init__(self, max_entries: int = 1024):
@@ -65,21 +88,25 @@ class PlanCache:
         self._entries: Dict[Any, Any] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: Any, build: Callable[[], Any]) -> Any:
-        try:
-            plan = self._entries.pop(key)
+        plan = self._entries.pop(key, _MISSING)
+        if plan is not _MISSING:
             self._entries[key] = plan  # re-insert: LRU recency refresh
             self.hits += 1
             return plan
-        except KeyError:
-            self.misses += 1
-            plan = build()
-            if len(self._entries) >= self.max_entries:
-                # evict the least recently used (dict preserves order)
-                self._entries.pop(next(iter(self._entries)))
-            self._entries[key] = plan
-            return plan
+        self.misses += 1
+        plan = build()
+        # build() may have inserted this very key reentrantly; drop the
+        # stale copy so the re-insert below lands at MRU exactly once
+        self._entries.pop(key, None)
+        self._entries[key] = plan
+        while len(self._entries) > self.max_entries:
+            # evict the least recently used (dict preserves order)
+            self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+        return plan
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -88,6 +115,146 @@ class PlanCache:
         self._entries.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+
+
+class ResultCache:
+    """Cross-request LRU memo of finished query answers.
+
+    Key: ``(normalized AST, subject, obj, limit)`` — see
+    :func:`result_key`.  Values are stored as frozensets; callers get
+    fresh mutable copies so a consumer mutating its answer cannot corrupt
+    later replays.  ``ttl_s`` bounds staleness (``None`` = never expires);
+    ``max_entries`` bounds size with LRU eviction.  ``clock`` is
+    injectable for deterministic TTL tests.
+    """
+
+    def __init__(self, max_entries: int = 4096, ttl_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_entries = max_entries
+        self.ttl_s = ttl_s
+        self.clock = clock
+        self._entries: Dict[Any, Tuple[frozenset, float]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.expirations = 0
+
+    def get(self, key: Any) -> Optional[frozenset]:
+        entry = self._entries.pop(key, None)
+        if entry is None:
+            self.misses += 1
+            return None
+        value, stamp = entry
+        if self.ttl_s is not None and self.clock() - stamp > self.ttl_s:
+            self.expirations += 1
+            self.misses += 1
+            return None
+        self._entries[key] = entry  # LRU recency refresh
+        self.hits += 1
+        return value
+
+    def put(self, key: Any, value: Set[Tuple[int, int]]) -> None:
+        if self.max_entries <= 0:
+            return
+        self._entries.pop(key, None)
+        self._entries[key] = (frozenset(value), self.clock())
+        while len(self._entries) > self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.expirations = 0
+
+
+def result_key(q: "Query") -> Tuple[str, Optional[int], Optional[int],
+                                    Optional[int]]:
+    """ResultCache key: normalized AST + the full endpoint binding.
+    ``limit`` participates because it changes the answer set."""
+    return (normalized_key(q.expr), q.subject, q.obj, q.limit)
+
+
+def probe_result_cache(
+    cache: ResultCache,
+    queries: Sequence["Query"],
+    results: List[Optional[Set[Tuple[int, int]]]],
+    on_hit: Optional[Callable[[int, frozenset], None]] = None,
+    on_miss: Optional[Callable[[int], None]] = None,
+) -> Dict[Tuple, List[int]]:
+    """Shared ``eval_many`` admission: fill ``results[i]`` (a fresh set
+    copy) for every cached query, and return the misses grouped as
+    ``{result key: [query indices]}`` — duplicates collapse onto one
+    pending entry.  ``on_hit``/``on_miss`` let the ring engine surface
+    per-query cache counters in its stats rows."""
+    pending: Dict[Tuple, List[int]] = {}
+    for idx, q in enumerate(queries):
+        key = result_key(q)
+        cached = cache.get(key)
+        if cached is not None:
+            results[idx] = set(cached)
+            if on_hit is not None:
+                on_hit(idx, cached)
+        else:
+            pending.setdefault(key, []).append(idx)
+            if on_miss is not None:
+                on_miss(idx)
+    return pending
+
+
+def publish_result(
+    cache: ResultCache,
+    key: Tuple,
+    out: Set[Tuple[int, int]],
+    idxs: Sequence[int],
+    results: List[Optional[Set[Tuple[int, int]]]],
+) -> None:
+    """Shared ``eval_many`` completion: remember ``out`` in the result
+    cache and fan it out (as independent set copies) to every query
+    index that collapsed onto this key."""
+    cache.put(key, out)
+    for i in idxs:
+        results[i] = set(out)
+
+
+@dataclass
+class PlanBundle:
+    """Several compiled plans packed into one shared state space.
+
+    ``sizes[i]`` is plan i's state count (Glushkov m+1); ``offsets[i]``
+    its bit offset in the block-diagonal layout.  A plan-local mask ``D``
+    becomes ``D << offsets[i]`` in bundle space, and because transitions
+    never cross blocks, one combined T' table (see
+    :func:`repro.kernels.nfa_step.pack_block_diagonal`) steps every
+    plan's tasks in a single kernel batch.  ``S_max`` is the widest
+    plan's state count (the dense engine buckets by its own
+    pow2-quantized width, so padded stacks are at least this wide).
+
+    ``extras`` holds engine-specific lazily-built artifacts (e.g. the
+    packed block-diagonal table) so a bundle is built once per batch.
+    """
+
+    plans: List[Any]
+    sizes: List[int]
+    offsets: List[int]
+    S_total: int
+    S_max: int
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def build(cls, plans: Sequence[Any], sizes: Sequence[int]) -> "PlanBundle":
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        return cls(plans=list(plans), sizes=list(sizes), offsets=offsets,
+                   S_total=off, S_max=max(sizes) if sizes else 0)
 
 
 def make_engine(graph, kind: str = "ring", **kwargs):

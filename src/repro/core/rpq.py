@@ -26,6 +26,20 @@ traversal (``wavefront=False`` processes one entry per superstep and is
 the reference).  Only part 1.5 is batched; its inputs depend on nothing
 mutable, which is what makes the phase split sound.
 
+Heterogeneous batching (``eval_many``): several queries — with
+*different* automata — run as one superstep stream.  Each frontier entry
+carries its job (query), visited masks and wavelet-tree prunes stay
+per-job, and part 1.5 steps the merged task list through ONE
+``kernels/nfa_step`` call by lifting every task's mask into the
+:class:`~repro.core.engines.PlanBundle`'s block-diagonal state space
+(plan i's states at bit offset_i; transitions never cross blocks).
+Because jobs share no mutable state and per-job task order equals the
+solo FIFO order, every job's results and traversal work counters
+(activations, supersteps, enumerations) are identical to its solo
+``eval``; only ``kernel_batches``/``kernel_tasks`` differ, since the
+kernel-vs-scalar threshold is decided on the *merged* task list the jobs
+actually share.
+
 A subject is reported when the initial NFA state activates.  Visited-mask
 soundness note: the paper stores at every internal L_s node v a mask D[v]
 (the intersection of leaf masks below) and updates it with D[v] |= D on
@@ -45,7 +59,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from . import regex as rx
-from .engines import PlanCache, QueryLike, as_query
+from .engines import (PlanBundle, PlanCache, QueryLike, ResultCache,
+                      as_query, probe_result_cache, publish_result)
 from .glushkov import Glushkov
 from .ring import Ring
 
@@ -63,6 +78,8 @@ class QueryStats:
     supersteps: int = 0
     kernel_batches: int = 0
     kernel_tasks: int = 0
+    result_cache_hits: int = 0
+    result_cache_misses: int = 0
 
 
 @dataclass
@@ -71,6 +88,22 @@ class _RingPlan:
 
     g: Glushkov
     Bv: Dict[Tuple[int, int], int]
+
+
+@dataclass
+class _Job:
+    """One traversal of the multi-job wavefront (``_traverse_many``)."""
+
+    plan: _RingPlan
+    start_obj: Optional[int]
+    stats: QueryStats
+    target: Optional[int] = None
+    limit: Optional[int] = None
+    offset: int = 0                     # block-diagonal bit offset
+    done: bool = False
+    Ds: Dict[int, int] = field(default_factory=dict)
+    Dv: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    reported: Set[int] = field(default_factory=set)
 
 
 class RingRPQ:
@@ -87,12 +120,15 @@ class RingRPQ:
 
     def __init__(self, ring: Ring, paper_dv: bool = False,
                  wavefront: bool = True,
-                 kernel_threshold: Optional[int] = None):
+                 kernel_threshold: Optional[int] = None,
+                 result_cache: Optional[ResultCache] = None):
         self.ring = ring
         self.paper_dv = paper_dv
         self.wavefront = wavefront
         self.kernel_threshold = kernel_threshold
         self.plans = PlanCache()
+        self.results = result_cache if result_cache is not None else ResultCache()
+        self.bundle_kernel_batches = 0   # multi-plan nfa_step dispatches
         self._auto_threshold: Optional[float] = None
 
     # -- public API ----------------------------------------------------------
@@ -123,25 +159,104 @@ class RingRPQ:
     ) -> List[Set[Tuple[int, int]]]:
         """Answer a batch of queries; results match per-query :meth:`eval`.
 
-        The batch shares this engine's plan cache (one Glushkov + B[v]
-        table per distinct normalized expression) and memoizes exact
-        duplicate requests within the batch.
+        Fixed-endpoint queries — even with *different* expressions — run
+        as one multi-job wavefront (``_traverse_many``): their frontiers
+        advance in lockstep supersteps and every superstep's merged task
+        list takes the bit-parallel transition in a single batch through
+        the block-diagonal plan bundle.  The batch shares the plan cache
+        and consults the cross-request :class:`ResultCache` first;
+        duplicate requests inside the batch collapse onto one job.
+
+        ``deadline_s`` is a *batch-wide* budget (unlike :meth:`eval`,
+        where it is per-query): the coalesced wavefront and the
+        delegated (x,E,y) queries all share one absolute deadline, and
+        exceeding it raises TimeoutError for the whole batch — the right
+        unit for an admission bucket with one latency budget.
         """
-        out: List[Set[Tuple[int, int]]] = []
-        memo: Dict[Tuple, Set[Tuple[int, int]]] = {}
-        for q in queries:
-            q = as_query(q)
-            key = (q.expr, q.subject, q.obj, q.limit)
-            if key not in memo:
-                stats = QueryStats()
-                memo[key] = self.eval(q.expr, q.subject, q.obj, q.limit,
-                                      stats=stats, deadline_s=deadline_s)
-                if stats_out is not None:
-                    stats_out.append(stats)
-            elif stats_out is not None:
-                stats_out.append(QueryStats())
-            out.append(set(memo[key]))
-        return out
+        import time as _time
+        qs = [as_query(q) for q in queries]
+        results: List[Optional[Set[Tuple[int, int]]]] = [None] * len(qs)
+        stats_list = [QueryStats() for _ in qs]
+        deadline = (_time.time() + deadline_s) if deadline_s else None
+
+        def on_hit(idx, cached):
+            stats_list[idx].result_cache_hits += 1
+            stats_list[idx].results = len(cached)
+
+        def on_miss(idx):
+            stats_list[idx].result_cache_misses += 1
+
+        pending = probe_result_cache(self.results, qs, results,
+                                     on_hit=on_hit, on_miss=on_miss)
+
+        jobs = []   # (cache key, query, ast, job)
+        for key, idxs in pending.items():
+            q = qs[idxs[0]]
+            stats = stats_list[idxs[0]]
+            ast = rx.parse(q.expr)
+            if q.subject is None and q.obj is None:
+                # (x, E, y) two-phase: phase 2 depends on phase 1's
+                # output, so it cannot join the lockstep wavefront —
+                # but it still draws on the shared batch deadline
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - _time.time()
+                    if remaining <= 0:
+                        raise TimeoutError("query deadline exceeded")
+                res = self.eval_ast(ast, None, None, q.limit, stats,
+                                    remaining)
+                publish_result(self.results, key, res, idxs, results)
+                continue
+            null = rx.nullable(ast)
+            if q.subject is not None and q.obj is not None:
+                if null and q.subject == q.obj:
+                    res = {(q.subject, q.obj)}
+                    stats.results = len(res)
+                    if q.limit is not None and len(res) > q.limit:
+                        res = set(list(res)[: q.limit])
+                    publish_result(self.results, key, res, idxs, results)
+                    continue
+                p_bwd = self._plan(ast)
+                p_fwd = self._plan(rx.reverse(ast))
+                if self._start_cost(p_bwd.g) <= self._start_cost(p_fwd.g):
+                    plan, start, tgt = p_bwd, q.obj, q.subject
+                else:
+                    plan, start, tgt = p_fwd, q.subject, q.obj
+                job = _Job(plan=plan, start_obj=start, stats=stats,
+                           target=tgt)
+            elif q.obj is not None:                       # (x, E, o)
+                job = _Job(plan=self._plan(ast), start_obj=q.obj,
+                           stats=stats, limit=q.limit)
+            else:                                         # (s, E, y)
+                job = _Job(plan=self._plan(rx.reverse(ast)),
+                           start_obj=q.subject, stats=stats, limit=q.limit)
+            jobs.append((key, q, ast, job))
+
+        if jobs:
+            self._traverse_many([j for (_, _, _, j) in jobs],
+                                deadline=deadline)
+        for key, q, ast, job in jobs:
+            null = rx.nullable(ast)
+            out: Set[Tuple[int, int]] = set()
+            if q.subject is not None and q.obj is not None:
+                if job.target in job.reported:
+                    out.add((q.subject, q.obj))
+            elif q.obj is not None:
+                if null:
+                    out.add((q.obj, q.obj))
+                out.update((s, q.obj) for s in job.reported)
+            else:
+                if null:
+                    out.add((q.subject, q.subject))
+                out.update((q.subject, o) for o in job.reported)
+            job.stats.results = len(out)
+            if q.limit is not None and len(out) > q.limit:
+                out = set(list(out)[: q.limit])
+            publish_result(self.results, key, out, pending[key], results)
+
+        if stats_out is not None:
+            stats_out.extend(stats_list)
+        return results
 
     def eval_ast(self, ast, subject=None, obj=None, limit=None, stats=None,
                  deadline_s=None):
@@ -161,13 +276,13 @@ class RingRPQ:
             # *some* object...
             p_bwd = self._plan(ast)
             sources = self._traverse(
-                p_bwd, start_obj=None, stats=stats, collect="subjects"
+                p_bwd, start_obj=None, stats=stats
             )
             # phase 2: from each such subject, run (s, E, y)
             p_fwd = self._plan(rx.reverse(ast))
             for s in sorted(sources):
                 objs = self._traverse(
-                    p_fwd, start_obj=s, stats=stats, collect="subjects"
+                    p_fwd, start_obj=s, stats=stats
                 )
                 out.update((s, o) for o in objs)
                 if limit is not None and len(out) >= limit:
@@ -178,7 +293,7 @@ class RingRPQ:
                 out.add((obj, obj))
             p_bwd = self._plan(ast)
             srcs = self._traverse(p_bwd, start_obj=obj, stats=stats,
-                                  collect="subjects", limit=limit)
+                                  limit=limit)
             out.update((s, obj) for s in srcs)
         elif obj is None:
             # (s, E, y) == (y, ^E, s) backward from s
@@ -186,7 +301,7 @@ class RingRPQ:
                 out.add((subject, subject))
             p_fwd = self._plan(rx.reverse(ast))
             objs = self._traverse(p_fwd, start_obj=subject, stats=stats,
-                                  collect="subjects", limit=limit)
+                                  limit=limit)
             out.update((subject, o) for o in objs)
         else:
             # (s, E, o) both fixed: pick the cheaper direction (Sec. 5:
@@ -203,7 +318,7 @@ class RingRPQ:
                 else:
                     p, start, tgt = p_fwd, subject, obj
                 found = self._traverse(p, start_obj=start, stats=stats,
-                                       collect="subjects", target=tgt)
+                                       target=tgt)
                 if tgt in found:
                     out.add((subject, obj))
         stats.results = len(out)
@@ -277,28 +392,78 @@ class RingRPQ:
             self._auto_threshold = 64.0 if on_tpu else float("inf")
         return self._auto_threshold
 
-    def _transition_batch(self, g: Glushkov, masks: List[int],
-                          stats: QueryStats) -> List[int]:
-        """T'[mask] for every wavefront task — one Pallas ``nfa_step`` call
-        for the whole batch, or scalar byte-split tables below threshold."""
-        if not masks:
+    def _bundle(self, jobs: List[_Job]) -> PlanBundle:
+        """Block-diagonal bundle over the distinct plans of ``jobs``; sets
+        each job's bit offset.  The packed combined T' table is built
+        lazily (first kernel dispatch) in ``bundle.extras``."""
+        plans: List[_RingPlan] = []
+        index: Dict[int, int] = {}
+        for job in jobs:
+            if id(job.plan) not in index:
+                index[id(job.plan)] = len(plans)
+                plans.append(job.plan)
+        bundle = PlanBundle.build(plans, [p.g.m + 1 for p in plans])
+        for job in jobs:
+            job.offset = bundle.offsets[index[id(job.plan)]]
+        return bundle
+
+    def _transition_many(self, tasks: List[Tuple[_Job, int, int, int]],
+                         bundle: PlanBundle) -> List[int]:
+        """T'[mask] for every wavefront task — one batched ``nfa_step``
+        call for the whole (possibly multi-plan) task list, or scalar
+        byte-split tables below threshold.
+
+        Multi-plan batches go through the bundle: each task's mask is
+        lifted by its job's block offset, the kernel steps through the
+        block-diagonal combined table, and the result shifts back down —
+        plan-exact because transitions never cross blocks.
+        """
+        if not tasks:
             return []
+        masks = [t[3] for t in tasks]
         if len(masks) < self._resolve_threshold():
-            return [g.Tp(m) for m in masks]
+            return [t[0].plan.g.Tp(m) for t, m in zip(tasks, masks)]
         from ..kernels import ops
-        W = g.nwords
-        X = np.zeros((len(masks), W), dtype=np.uint32)
-        for i, m in enumerate(masks):
-            for w in range(W):
-                X[i, w] = (m >> (32 * w)) & 0xFFFFFFFF
-        Y = np.asarray(ops.nfa_step(X, g.packed_bwd()))
-        stats.kernel_batches += 1
-        stats.kernel_tasks += len(masks)
+        single_plan = all(t[0].plan is tasks[0][0].plan for t in tasks)
+        if single_plan:
+            g = tasks[0][0].plan.g
+            W = g.nwords
+            X = np.zeros((len(masks), W), dtype=np.uint32)
+            for i, m in enumerate(masks):
+                for w in range(W):
+                    X[i, w] = (m >> (32 * w)) & 0xFFFFFFFF
+            Y = np.asarray(ops.nfa_step(X, g.packed_bwd()))
+            shifts = None
+        else:
+            if "packed_bwd" not in bundle.extras:
+                from ..kernels.nfa_step import pack_block_diagonal
+                bundle.extras["packed_bwd"] = pack_block_diagonal(
+                    [p.g.pred_mask for p in bundle.plans],
+                    bundle.offsets, bundle.S_total)
+            W = (bundle.S_total + 31) // 32
+            X = np.zeros((len(masks), W), dtype=np.uint32)
+            shifts = [t[0].offset for t in tasks]
+            for i, (m, off) in enumerate(zip(masks, shifts)):
+                lifted = m << off
+                for w in range(W):
+                    X[i, w] = (lifted >> (32 * w)) & 0xFFFFFFFF
+            Y = np.asarray(ops.nfa_step(X, bundle.extras["packed_bwd"]))
+            self.bundle_kernel_batches += 1
+        counted = set()
+        for t in tasks:
+            job = t[0]
+            if id(job) not in counted:
+                counted.add(id(job))
+                job.stats.kernel_batches += 1
+            job.stats.kernel_tasks += 1
         out = []
         for i in range(len(masks)):
             acc = 0
             for w in range(W):
                 acc |= int(Y[i, w]) << (32 * w)
+            if shifts is not None:
+                job = tasks[i][0]
+                acc = (acc >> shifts[i]) & ((1 << (job.plan.g.m + 1)) - 1)
             out.append(acc)
         return out
 
@@ -307,55 +472,79 @@ class RingRPQ:
         plan: _RingPlan,
         start_obj: Optional[int],
         stats: QueryStats,
-        collect: str = "subjects",
         target: Optional[int] = None,
         limit: Optional[int] = None,
     ) -> Set[int]:
         """Backward wavefront BFS (Secs. 4.1–4.3).  ``start_obj=None``
         starts from the full L_p range (Sec. 4.4).  Returns reported
-        subjects."""
+        subjects.  One-job wrapper over :meth:`_traverse_many` — the
+        multi-job stream with a single job is step-for-step identical."""
+        job = _Job(plan=plan, start_obj=start_obj, stats=stats,
+                   target=target, limit=limit)
+        self._traverse_many([job], deadline=getattr(self, "_deadline", None))
+        return job.reported
+
+    def _traverse_many(self, jobs: List[_Job],
+                       deadline: Optional[float] = None) -> None:
+        """Multi-job backward wavefront BFS: every job's frontier advances
+        in lockstep supersteps over one shared queue whose entries carry
+        their job.  Visited masks (leaf ``Ds``, internal ``Dv``), pruning,
+        and reporting are per-job, so each job's task subsequence — and
+        therefore its results and traversal work counters — equals its
+        solo traversal.  Only part 1.5 is shared: the merged task list
+        takes the bit-parallel transition in ONE batch through the
+        block-diagonal plan bundle (so the kernel-vs-scalar threshold,
+        and with it ``kernel_batches``/``kernel_tasks``, is decided on
+        the merged batch, not per job).
+
+        A job that hits its ``target`` or ``limit`` is marked done and
+        contributes nothing further (the solo equivalent of returning
+        mid-superstep)."""
         ring = self.ring
-        g, Bv = plan.g, plan.Bv
         wt_p, wt_s = ring.wt_p, ring.wt_s
         s_levels = wt_s.levels
-        INIT = g.initial
+        bundle = self._bundle(jobs)
 
-        Ds: Dict[int, int] = {}           # leaf visited masks  D[s]
-        Dv: Dict[Tuple[int, int], int] = {}  # internal L_s masks D[v]
-        reported: Set[int] = set()
-
-        D0 = g.F & ~1  # state 0 never has incoming edges; strip eps bit
-        if D0 == 0:
-            return reported
-        queue: deque = deque()
-        if start_obj is None:
-            queue.append((ring.full_range(), D0))
-        else:
-            Ds[start_obj] = D0
-            queue.append((ring.object_range(start_obj), D0))
+        queue: deque = deque()  # entries: (job, (b, e), D)
+        for job in jobs:
+            D0 = job.plan.g.F & ~1  # state 0 has no incoming edges; strip eps
+            if D0 == 0:
+                job.done = True
+                continue
+            if job.start_obj is None:
+                queue.append((job, ring.full_range(), D0))
+            else:
+                job.Ds[job.start_obj] = D0
+                queue.append((job, ring.object_range(job.start_obj), D0))
 
         import time as _time
-        deadline = getattr(self, "_deadline", None)
         while queue:
+            if all(job.done for job in jobs):
+                break
             if self.wavefront:
                 chunk = list(queue)
                 queue.clear()
             else:
                 chunk = [queue.popleft()]
-            stats.supersteps += 1
+            stepped = set()
+            for job, _rng, _D in chunk:
+                if not job.done and id(job) not in stepped:
+                    stepped.add(id(job))
+                    job.stats.supersteps += 1
 
             # ---- part 1: distinct predicates with D & B[p] != 0, over the
             # whole chunk — yields the superstep's task list ----
-            tasks: List[Tuple[int, int, int]] = []  # (sb, se, D & B[p])
-            for (b, e), D in chunk:
-                if e <= b:
+            tasks: List[Tuple[_Job, int, int, int]] = []  # (job, sb, se, D&B[p])
+            for job, (b, e), D in chunk:
+                if job.done or e <= b:
                     continue
+                g, Bv, stats = job.plan.g, job.plan.Bv, job.stats
                 stats.bfs_steps += 1
                 if deadline is not None and stats.bfs_steps % 64 == 0 \
                         and _time.time() > deadline:
                     raise TimeoutError("query deadline exceeded")
 
-                def prune_p(l, prefix, covered, D=D):
+                def prune_p(l, prefix, covered, D=D, Bv=Bv, stats=stats):
                     stats.wt_nodes_visited += 1
                     return (D & Bv.get((l, prefix), 0)) == 0
 
@@ -368,19 +557,24 @@ class RingRPQ:
                     se = int(ring.C_p[p]) + re_
                     if se <= sb:
                         continue
-                    tasks.append((sb, se, masked))
+                    tasks.append((job, sb, se, masked))
 
-            # ---- part 1.5: bit-parallel D-step for every task at once ----
-            steps = self._transition_batch(g, [t[2] for t in tasks], stats)
+            # ---- part 1.5: bit-parallel D-step for every task at once,
+            # across ALL jobs/plans in one batch ----
+            steps = self._transition_many(tasks, bundle)
 
-            # ---- parts 2+3, in task order (== the sequential FIFO order,
-            # so the visited-mask evolution is identical) ----
-            next_front: List[Tuple[Tuple[int, int], int]] = []
-            for (sb, se, _masked), Dstep in zip(tasks, steps):
-                if Dstep == 0:
+            # ---- parts 2+3, in task order (== each job's sequential FIFO
+            # order, so per-job visited-mask evolution is identical) ----
+            next_front: List[Tuple[_Job, Tuple[int, int], int]] = []
+            for (job, sb, se, _masked), Dstep in zip(tasks, steps):
+                if job.done or Dstep == 0:
                     continue
+                stats = job.stats
+                Ds, Dv = job.Ds, job.Dv
+                INIT = job.plan.g.initial
 
-                def prune_s(l, prefix, covered, Dstep=Dstep):
+                def prune_s(l, prefix, covered, Dstep=Dstep, Dv=Dv,
+                            stats=stats):
                     stats.wt_nodes_visited += 1
                     if l == s_levels:
                         return False  # leaves handled on yield
@@ -403,12 +597,12 @@ class RingRPQ:
                     Ds[s] = old | Dnew
                     stats.node_state_activations += bin(Dnew).count("1")
                     if Dnew & INIT:
-                        reported.add(s)
-                        if target is not None and s == target:
-                            return reported
-                        if limit is not None and len(reported) >= limit:
-                            return reported
+                        job.reported.add(s)
+                        if (job.target is not None and s == job.target) or \
+                                (job.limit is not None and
+                                 len(job.reported) >= job.limit):
+                            job.done = True
+                            break
                     # ---- part 3: subject becomes the next object range ----
-                    next_front.append((ring.object_range(s), Dnew))
-            queue.extend(next_front)
-        return reported
+                    next_front.append((job, ring.object_range(s), Dnew))
+            queue.extend(e for e in next_front if not e[0].done)

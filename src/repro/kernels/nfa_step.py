@@ -13,13 +13,24 @@ Layout: node axis is minor (lanes), packed-word axis W is major, so a
 block is [W, TILE_N] uint32 and every op is a full-lane vector op.
 The S-step unrolled loop reads one scalar PRED word per (j, w) — those
 live in VMEM and are broadcast against the lane vector.
+
+Heterogeneous batches: the same kernel serves tasks from *different*
+automata in one call when their PRED tables are packed block-diagonally
+(:func:`pack_block_diagonal`).  Plan i's states occupy bit range
+[offset_i, offset_i + S_i); a plan-local mask shifted by its offset only
+ever selects rows of its own block, and those rows only set bits inside
+the block, so per-plan semantics are preserved exactly while the lane
+batch mixes plans freely — the block-diagonal composition of distinct
+NFAs from the linear-algebra RPQ formulation, mapped onto packed words.
 """
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 TILE_N = 512  # nodes per block; multiple of 128 lanes
@@ -61,3 +72,30 @@ def nfa_step(X: jnp.ndarray, bwd: jnp.ndarray, interpret: bool = True):
         interpret=interpret,
     )(xt, bwd)
     return out.T[:N]
+
+
+def pack_block_diagonal(
+    pred_masks: Sequence[Sequence[int]],
+    offsets: Sequence[int],
+    S_total: int,
+) -> np.ndarray:
+    """Pack several automata's predecessor masks into one block-diagonal
+    ``bwd`` operand for :func:`nfa_step`.
+
+    ``pred_masks[i][j]`` is plan i's (Python-int) predecessor mask of
+    state j; plan i's block starts at bit ``offsets[i]``.  Returns uint32
+    [S_total, W_total] where row ``offsets[i] + j`` holds
+    ``pred_masks[i][j] << offsets[i]`` — i.e. both the row index and the
+    mask bits are lifted into bundle space, so ``T'`` applied to a
+    shifted task mask stays confined to its plan's block.
+    """
+    W = (S_total + 31) // 32
+    out = np.zeros((S_total, W), dtype=np.uint32)
+    for masks, off in zip(pred_masks, offsets):
+        for j, m in enumerate(masks):
+            shifted = int(m) << off
+            for w in range(W):
+                word = (shifted >> (32 * w)) & 0xFFFFFFFF
+                if word:
+                    out[off + j, w] = word
+    return out

@@ -156,6 +156,54 @@ def test_wavefront_kernel_path_fires():
     assert stats.kernel_tasks > 0
 
 
+def test_plan_cache_eviction_accounting():
+    """Regression: a hit on an about-to-evict entry must refresh LRU order
+    BEFORE a later miss inserts, so the miss evicts the true LRU — and
+    counters/size bounds must survive reentrant (concurrent-looking)
+    get/build interleavings."""
+    from repro.core.engines import PlanCache
+    cache = PlanCache(max_entries=2)
+    cache.get("A", lambda: "a")
+    cache.get("B", lambda: "b")
+    assert cache.get("A", lambda: "a'") == "a"   # hit: A becomes MRU
+    cache.get("C", lambda: "c")                  # miss: must evict B, not A
+    assert cache.get("A", lambda: "NEW-A") == "a"
+    assert cache.get("B", lambda: "new-b") == "new-b"  # B was evicted
+    assert (cache.hits, cache.misses, cache.evictions) == (2, 4, 2)
+    assert len(cache) == 2
+
+    # reentrant interleaving: building X consults the cache itself (hits
+    # an about-to-evict entry, then inserts new keys) — the size bound
+    # and the X insert must both survive
+    cache = PlanCache(max_entries=2)
+    cache.get("old", lambda: 0)
+    cache.get("hot", lambda: 1)
+
+    def build_x():
+        assert cache.get("hot", lambda: -1) == 1   # refresh mid-build
+        cache.get("extra", lambda: 2)              # evicts "old"
+        return 3
+
+    assert cache.get("X", build_x) == 3
+    assert len(cache) == 2
+    assert cache.get("X", lambda: -1) == 3   # X survived its own build
+
+    # hammering one hot key at capacity never evicts it, miss/hit totals
+    # stay exact under interleaved inserts
+    cache = PlanCache(max_entries=2)
+    h = m = 0
+    for i in range(20):
+        cache.get("hot", lambda: "v")
+        m += 1 if i == 0 else 0
+        h += 0 if i == 0 else 1
+        cache.get(f"cold{i}", lambda: i)
+        m += 1
+        assert cache.get("hot", lambda: "REBUILT") == "v"
+        h += 1
+        assert len(cache) <= 2
+    assert (cache.hits, cache.misses) == (h, m)
+
+
 def test_plan_cache_shares_automata():
     g = metro_graph()
     for kind in ("ring", "dense"):
