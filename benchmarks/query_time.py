@@ -8,9 +8,21 @@ Engines:
   classical     — node-at-a-time product-graph BFS over CSR (the textbook
                   baseline every system reduces to)
   dense-tpu     — the frontier-synchronous TPU engine (jit on CPU here)
+
+Planner workload (``query_time/planner/*``): an anchored vs unanchored
+split over rare-predicate expressions, each run with ``planner="naive"``
+(the pre-planner parity reference) and ``planner="cost"``.  Unanchored
+queries are where naive evaluation is pathological (full-range phase 1 +
+per-subject phase 2) and where the planner's ``split``/``reverse`` plans
+pay; anchored queries should stay at parity (the planner keeps the
+forward plan unless an alternative clears a margin).  The rows ride the
+``--smoke --json`` CI job (``BENCH_SMOKE=1`` shrinks the graph and skips
+the Table-2 engine sweep), so ``BENCH_smoke.json`` tracks the planner's
+win across commits.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import defaultdict
 from typing import Dict, List
@@ -18,11 +30,14 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.dense import DenseRPQ
+from repro.core.fixtures import scale_free_graph
 from repro.core.oracle import eval_oracle
 from repro.core.ring import Ring
-from repro.core.rpq import RingRPQ
-from .common import (RESULT_LIMIT, bench_graph, bench_ring, bench_workload,
-                     summarize, timed_eval, QueryTiming)
+from repro.core.rpq import QueryStats, RingRPQ
+from .common import (RESULT_LIMIT, TIMEOUT_S, bench_graph, bench_ring,
+                     bench_workload, summarize, timed_eval, QueryTiming)
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
 
 
 def _engines():
@@ -43,7 +58,58 @@ def _engines():
     }
 
 
+def _planner_rows() -> list:
+    """Anchored vs unanchored rare-predicate workload, planner on vs off."""
+    V, P, E = (400, 8, 2600) if SMOKE else (1200, 8, 8000)
+    g = scale_free_graph(V, P, E, seed=23)
+    ring = Ring(g)
+    hot, hot2, rare = 0, 1, P - 1   # Zipf labels: highest id = rarest
+    rng = np.random.default_rng(5)
+    objs = rng.integers(0, V, 4)
+    workloads = {
+        # the pathological class: naive = full-range phase 1 + per-subject
+        # phase 2; the planner splits at the rare predicate (or flips to
+        # objects-first) instead
+        "unanchored": [(f"{hot}/{rare}", None, None),
+                       (f"{hot}/{rare}/{hot2}", None, None),
+                       (f"{hot2}/{rare}/{hot}", None, None)],
+        # the well-behaved class: one bound endpoint already confines the
+        # traversal; the planner should keep (and match) the forward plan
+        "anchored": [(f"{hot}/{rare}*", None, int(o)) for o in objs[:2]]
+                    + [(f"{rare}/{hot}*", int(o), None) for o in objs[2:]],
+    }
+    rows = []
+    nonforward = 0
+    for wl_name, queries in workloads.items():
+        means = {}
+        for pol in ("naive", "cost"):
+            eng = RingRPQ(ring, planner=pol)
+            times = []
+            for expr, s, o in queries:
+                st = QueryStats()
+                t0 = time.time()
+                try:
+                    eng.eval(expr, s, o, limit=RESULT_LIMIT, stats=st,
+                             deadline_s=TIMEOUT_S)
+                except TimeoutError:
+                    pass
+                times.append(time.time() - t0)
+                if pol == "cost" and st.plan_mode not in ("forward", ""):
+                    nonforward += 1
+            means[pol] = float(np.mean(times))
+            rows.append((f"query_time/planner/{wl_name}/{pol}_average_us",
+                         means[pol] * 1e6))
+        rows.append((f"query_time/planner/{wl_name}/speedup",
+                     means["naive"] / max(means["cost"], 1e-9)))
+    rows.append(("query_time/planner/nonforward_plans", nonforward))
+    return rows
+
+
 def run(n_queries: int = 20) -> list:
+    if SMOKE:
+        # smoke keeps only the planner rows (the Table-2 sweep needs the
+        # full-scale fixtures to mean anything and is too slow for CI)
+        return _planner_rows()
     wl = bench_workload(n_queries)
     # the classical baseline explodes on v-to-v over 20k nodes (it BFSes
     # from every node) — mirror the paper's per-query timeout by capping
@@ -78,4 +144,5 @@ def run(n_queries: int = 20) -> list:
                  c["average_s"] / max(r["average_s"], 1e-9)))
     rows.append(("query_time/dense_speedup_vs_ring_avg",
                  r["average_s"] / max(d["average_s"], 1e-9)))
+    rows.extend(_planner_rows())
     return rows

@@ -48,11 +48,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import planner as qp
 from . import regex as rx
-from .engines import (PlanCache, QueryLike, ResultCache, as_query,
+from .engines import (PlanCache, QueryLike, QueryStats, ResultCache,
+                      as_query, normalized_key,
                       probe_result_cache, publish_result)
 from .glushkov import Glushkov
 from .ring import LabeledGraph
+from .stats import GraphStats
 
 
 @dataclass
@@ -69,15 +72,7 @@ class DenseGraph:
     @classmethod
     def from_graph(cls, g: LabeledGraph) -> "DenseGraph":
         P = g.num_preds
-        s = np.concatenate([g.s, g.o])
-        p = np.concatenate([g.p, g.p + P])
-        o = np.concatenate([g.o, g.s])
-        key = (s * (2 * P) + p) * g.num_nodes + o
-        uniq = np.unique(key)
-        s = uniq // (2 * P * g.num_nodes)
-        rem = uniq % (2 * P * g.num_nodes)
-        p = rem // g.num_nodes
-        o = rem % g.num_nodes
+        s, p, o = g.completed_triples()
         order = np.argsort(s, kind="stable")
         return cls(
             subj=jnp.asarray(s[order], dtype=jnp.int32),
@@ -200,42 +195,119 @@ class _DensePlan:
 
 
 class DenseRPQ:
-    """Dense-engine 2RPQ evaluation with RingRPQ-identical semantics."""
+    """Dense-engine 2RPQ evaluation with RingRPQ-identical semantics.
+
+    ``planner``/``stats`` mirror :class:`~repro.core.rpq.RingRPQ`: the
+    cost-based planner may run ``reverse`` or ``split`` physical plans
+    (executed with the same padded/batched BFS primitives), and
+    ``planner="naive"`` keeps the pre-planner behavior.
+    """
 
     def __init__(self, graph: LabeledGraph, source_batch: int = 16,
-                 result_cache: Optional[ResultCache] = None):
+                 result_cache: Optional[ResultCache] = None,
+                 planner: str = "cost",
+                 stats: Optional[GraphStats] = None):
+        if planner not in ("cost", "naive", "forward", "reverse", "split"):
+            raise ValueError(f"unknown planner policy {planner!r}")
         self.graph = graph
         self.dg = DenseGraph.from_graph(graph)
         self.source_batch = source_batch
+        self.planner = planner
         self.plans = PlanCache()
+        self.decisions = PlanCache()
         self.results = result_cache if result_cache is not None else ResultCache()
         self.hetero_dispatches = 0   # _bfs_hetero device calls
+        self._stats = stats
+        self._edge_s: Optional[np.ndarray] = None   # completed edges,
+        self._edge_o: Optional[np.ndarray] = None   # label-major order
+        self._edge_off: Optional[np.ndarray] = None
+
+    @property
+    def graph_stats(self) -> GraphStats:
+        """Selectivity statistics for the planner (lazy; injectable)."""
+        if self._stats is None:
+            self._stats = GraphStats.from_graph(self.graph)
+        return self._stats
+
+    def _resolve_lit(self, lit: rx.Lit) -> int:
+        return self.graph.resolve_lit(lit)
 
     def _automaton(self, ast) -> Glushkov:
-        g = self.graph
-        P = g.num_preds
-
-        def resolve(lit: rx.Lit) -> int:
-            if g.pred_names is not None and not lit.name.isdigit():
-                base = g.pred_of(lit.name, False)
-            else:
-                base = int(lit.name)
-            if lit.inverse:
-                base = base + P if base < P else base - P
-            return base
-
-        return Glushkov.from_ast(ast, resolve)
+        return Glushkov.from_ast(ast, self._resolve_lit)
 
     def _plan(self, ast) -> _DensePlan:
         """Automaton + plane tables for ``ast``, shared via the plan cache
-        (keyed by the canonical printed AST)."""
+        (keyed by the canonical AST, so equivalent spellings share)."""
 
         def build():
             g = self._automaton(ast)
             B, PRED, _F = _plane_tables(g, self.dg.num_labels)
             return _DensePlan(g=g, B=B, PRED=PRED)
 
-        return self.plans.get(str(ast), build)
+        return self.plans.get(normalized_key(ast), build)
+
+    def _decide(self, ast, subject_bound: bool, obj_bound: bool,
+                stats: Optional[QueryStats]) -> qp.Plan:
+        """Planner decision, memoized per (expression, binding) class.
+        The higher unanchored margin reflects that dense naive unanchored
+        evaluation is already one batched all-nodes BFS."""
+        return qp.decide(ast, subject_bound, obj_bound,
+                         policy=self.planner, decisions=self.decisions,
+                         stats_provider=lambda: self.graph_stats,
+                         resolve=self._resolve_lit, record=stats,
+                         unanchored_margin=qp.ANCHORED_MARGIN)
+
+    # -- split-plan primitives ---------------------------------------------
+    def _pred_edges(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(subjects, objects) of the completed edges labeled ``p`` — the
+        seed edges of a split plan, label-major order built on first use."""
+        if self._edge_s is None:
+            pred = np.asarray(self.dg.pred)
+            order = np.argsort(pred, kind="stable")
+            self._edge_s = np.asarray(self.dg.subj)[order].astype(np.int64)
+            self._edge_o = np.asarray(self.dg.obj)[order].astype(np.int64)
+            cnt = np.bincount(pred, minlength=self.dg.num_labels)
+            self._edge_off = np.zeros(self.dg.num_labels + 1, dtype=np.int64)
+            np.cumsum(cnt, out=self._edge_off[1:])
+        if not (0 <= p < self.dg.num_labels):
+            z = np.zeros(0, dtype=np.int64)
+            return z, z
+        b, e = int(self._edge_off[p]), int(self._edge_off[p + 1])
+        return self._edge_s[b:e], self._edge_o[b:e]
+
+    def _half_union(self, side_ast, seeds, reverse: bool = False) -> set:
+        """Union half-traversal of a split plan: one multi-start BFS from
+        all seeds (the node axis carries them simultaneously), plus the
+        seeds themselves when the half matches the empty word."""
+        seeds = [int(x) for x in seeds]
+        if not seeds:
+            return set()
+        if side_ast is None:
+            return set(seeds)
+        ast = rx.reverse(side_ast) if reverse else side_ast
+        hit = self._run_from(self._plan(ast), np.asarray(seeds))
+        out = set(int(v) for v in np.nonzero(hit)[0])
+        if rx.nullable(side_ast):
+            out.update(seeds)
+        return out
+
+    def _grouped_half(self, side_ast, endpoints: np.ndarray,
+                      reverse: bool = False) -> Dict[int, Tuple[int, ...]]:
+        """Per-endpoint half results for the unanchored split join: one
+        batched-BFS row per distinct seed endpoint."""
+        eps = [int(x) for x in endpoints]
+        if side_ast is None:
+            return {u: (u,) for u in eps}
+        ast = rx.reverse(side_ast) if reverse else side_ast
+        hits = self._run_from_batched(self._plan(ast), eps)
+        null = rx.nullable(side_ast)
+        out = {}
+        for i, u in enumerate(eps):
+            vals = set(int(v) for v in np.nonzero(hits[i])[0])
+            if null:
+                vals.add(u)
+            out[u] = tuple(vals)
+        return out
 
     def _start_planes(self, g: Glushkov, objs) -> np.ndarray:
         """[V, S] planes with F (minus eps bit) active on the start objects."""
@@ -342,45 +414,140 @@ class DenseRPQ:
                     hits[i] = vis0[r]
         return hits
 
+    # -- split / reverse plan execution ------------------------------------
+    def _seed_subjects(self, plan: qp.Plan, obj: int,
+                       stats: Optional[QueryStats]) -> np.ndarray:
+        """Right half from the bound object, then the surviving seed
+        edges' subjects (shared by the (x,E,o) and (s,E,o) split paths)."""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        if sarr.size == 0:
+            if stats is not None:
+                stats.plan_actual_frontier = 0
+            return sarr
+        U = self._half_union(sp.right, [obj])
+        keep = qp.isin_mask(oarr, U)
+        if stats is not None:
+            stats.plan_actual_frontier = int(keep.sum())
+        return np.unique(sarr[keep])
+
+    def _split_from_subj(self, plan: qp.Plan, subject: int,
+                         stats: Optional[QueryStats]) -> set:
+        """(s, E=A/p/B, y): objects reachable through any seed edge whose
+        subject endpoint the left half validates from ``subject``."""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        if sarr.size == 0:
+            if stats is not None:
+                stats.plan_actual_frontier = 0
+            return set()
+        Vs = self._half_union(sp.left, [subject], reverse=True)
+        keep = qp.isin_mask(sarr, Vs)
+        if stats is not None:
+            stats.plan_actual_frontier = int(keep.sum())
+        return self._half_union(sp.right, np.unique(oarr[keep]),
+                                reverse=True)
+
+    def _split_unanchored(self, plan: qp.Plan,
+                          stats: Optional[QueryStats],
+                          limit: Optional[int] = None) -> Set[Tuple[int, int]]:
+        """(x, E=A/p/B, y): per-endpoint batched half-BFS rows joined
+        through the seed edges (answer pairs need the SAME edge)."""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        if stats is not None:
+            stats.plan_actual_frontier = int(sarr.size)
+        if sarr.size == 0:
+            return set()
+        lmap = self._grouped_half(sp.left, np.unique(sarr))
+        rmap = self._grouped_half(sp.right, np.unique(oarr), reverse=True)
+        out: Set[Tuple[int, int]] = set()
+        for u, v in zip(sarr.tolist(), oarr.tolist()):
+            for a in lmap[u]:
+                for b in rmap[v]:
+                    out.add((a, b))
+            if limit is not None and len(out) >= limit:
+                return out
+        return out
+
     def eval(
         self,
         expr: str,
         subject: Optional[int] = None,
         obj: Optional[int] = None,
         limit: Optional[int] = None,
+        stats: Optional[QueryStats] = None,
     ) -> Set[Tuple[int, int]]:
         ast = rx.parse(expr)
         V = self.graph.num_nodes
         null = rx.nullable(ast)
         out: Set[Tuple[int, int]] = set()
+        plan = self._decide(ast, subject is not None, obj is not None, stats)
 
         if subject is None and obj is None:
             if null:
                 out.update((v, v) for v in range(V))
-            sources = np.nonzero(self._run_from(self._plan(ast), np.arange(V)))[0]
-            # batched phase 2: source_batch sources at a time
-            p_fwd = self._plan(rx.reverse(ast))
-            hits = self._run_from_batched(p_fwd, [int(s) for s in sources])
-            for bi, s in enumerate(sources):
-                for o in np.nonzero(hits[bi])[0]:
-                    out.add((int(s), int(o)))
+            if plan.mode == "split":
+                out.update(self._split_unanchored(plan, stats, limit=limit))
+            elif plan.mode == "reverse":
+                # objects-first: phase 1 over ^E finds the objects, then
+                # one batched-BFS row per object completes its subjects
+                objs = np.nonzero(self._run_from(
+                    self._plan(rx.reverse(ast)), np.arange(V)))[0]
+                if stats is not None:
+                    stats.plan_actual_frontier = len(objs)
+                hits = self._run_from_batched(self._plan(ast),
+                                              [int(o) for o in objs])
+                for bi, o in enumerate(objs):
+                    for s in np.nonzero(hits[bi])[0]:
+                        out.add((int(s), int(o)))
+            else:
+                sources = np.nonzero(
+                    self._run_from(self._plan(ast), np.arange(V)))[0]
+                if stats is not None:
+                    stats.plan_actual_frontier = len(sources)
+                # batched phase 2: source_batch sources at a time
+                p_fwd = self._plan(rx.reverse(ast))
+                hits = self._run_from_batched(p_fwd, [int(s) for s in sources])
+                for bi, s in enumerate(sources):
+                    for o in np.nonzero(hits[bi])[0]:
+                        out.add((int(s), int(o)))
         elif subject is None:
             if null:
                 out.add((obj, obj))
-            for s in np.nonzero(self._run_from(self._plan(ast), [obj]))[0]:
-                out.add((int(s), obj))
+            if plan.mode == "split":
+                seeds = self._seed_subjects(plan, obj, stats)
+                out.update((s, obj) for s in
+                           self._half_union(plan.split.left, seeds))
+            else:
+                for s in np.nonzero(self._run_from(self._plan(ast), [obj]))[0]:
+                    out.add((int(s), obj))
         elif obj is None:
             if null:
                 out.add((subject, subject))
-            p_fwd = self._plan(rx.reverse(ast))
-            for o in np.nonzero(self._run_from(p_fwd, [subject]))[0]:
-                out.add((subject, int(o)))
+            if plan.mode == "split":
+                out.update((subject, o) for o in
+                           self._split_from_subj(plan, subject, stats))
+            else:
+                p_fwd = self._plan(rx.reverse(ast))
+                for o in np.nonzero(self._run_from(p_fwd, [subject]))[0]:
+                    out.add((subject, int(o)))
         else:
             if null and subject == obj:
                 out.add((subject, obj))
+            elif plan.mode == "split":
+                seeds = self._seed_subjects(plan, obj, stats)
+                if subject in self._half_union(plan.split.left, seeds):
+                    out.add((subject, obj))
+            elif plan.mode == "reverse":
+                if self._run_from(self._plan(rx.reverse(ast)),
+                                  [subject])[obj]:
+                    out.add((subject, obj))
             else:
                 if self._run_from(self._plan(ast), [obj])[subject]:
                     out.add((subject, obj))
+        if stats is not None:
+            stats.results = len(out)
         if limit is not None and len(out) > limit:
             out = set(sorted(out)[:limit])
         return out
@@ -407,20 +574,31 @@ class DenseRPQ:
         pending = probe_result_cache(self.results, qs, results)
 
         rows: List[Tuple[_DensePlan, int]] = []
-        row_info: List[Tuple[Tuple, "rx.Node"]] = []  # (cache key, ast)
+        row_info: List[Tuple[Tuple, "rx.Node", str]] = []  # (key, ast, mode)
         for key, idxs in pending.items():
             q = qs[idxs[0]]
             ast = rx.parse(q.expr)
-            if q.subject is None and q.obj is None:
-                res = self.eval(q.expr, limit=q.limit)
+            qplan = self._decide(ast, q.subject is not None,
+                                 q.obj is not None, None)
+            if (q.subject is None and q.obj is None) \
+                    or qplan.mode == "split":
+                # multi-stage plans can't ride the single-BFS batch; the
+                # result stays keyed on the ORIGINAL normalized AST +
+                # endpoints, never the rewritten plan's expression
+                res = self.eval(q.expr, q.subject, q.obj, limit=q.limit)
                 publish_result(self.results, key, res, idxs, results)
+            elif q.obj is not None and q.subject is not None \
+                    and qplan.mode == "reverse":
+                # (s,E,o) from the subject side over ^E
+                rows.append((self._plan(rx.reverse(ast)), q.subject))
+                row_info.append((key, ast, "reverse"))
             elif q.obj is not None:
                 # (x,E,o) and (s,E,o) both run backward from o
                 rows.append((self._plan(ast), q.obj))
-                row_info.append((key, ast))
+                row_info.append((key, ast, "forward"))
             else:                                          # (s, E, y)
                 rows.append((self._plan(rx.reverse(ast)), q.subject))
-                row_info.append((key, ast))
+                row_info.append((key, ast, "forward"))
 
         if rows:
             distinct = {id(plan) for plan, _ in rows}
@@ -430,7 +608,7 @@ class DenseRPQ:
                                               batch_size=batch_size)
             else:
                 hits = self._run_hetero_rows(rows, batch_size=batch_size)
-        for bi, (key, ast) in enumerate(row_info):
+        for bi, (key, ast, mode) in enumerate(row_info):
             idxs = pending[key]
             q = qs[idxs[0]]
             null = rx.nullable(ast)
@@ -444,7 +622,9 @@ class DenseRPQ:
                     out.add((q.subject, q.subject))
                 out.update((q.subject, int(o)) for o in np.nonzero(hits[bi])[0])
             else:                                          # (s, E, o)
-                if (null and q.subject == q.obj) or hits[bi][q.subject]:
+                hit = hits[bi][q.obj] if mode == "reverse" \
+                    else hits[bi][q.subject]
+                if (null and q.subject == q.obj) or hit:
                     out.add((q.subject, q.obj))
             if q.limit is not None and len(out) > q.limit:
                 out = set(sorted(out)[: q.limit])

@@ -3,11 +3,14 @@
 The serving surface the engines plug into:
 
   * :class:`Query` — one 2RPQ request (expr + optional fixed endpoints);
-  * :class:`PlanCache` — per-engine automaton/plan cache keyed by the
-    *normalized* AST (``str(parse(expr))`` is canonical: the printer fully
-    parenthesizes, so ``a/b*`` and ``(a/(b)*)`` share one plan).  Repeated
-    and concurrent queries share Glushkov construction, B[v] mask tables
-    (ring) and bool-plane tables (dense);
+  * :class:`PlanCache` — per-engine cache of *planner outputs* keyed by
+    the normalized AST (:func:`normalized_key` canonicalizes
+    concatenation associativity and alternation operand order, so every
+    spelling of the same expression shares entries).  Engines keep two
+    instances: ``plans`` memoizes compiled artifacts (Glushkov + B[v]
+    mask tables on the ring, bool-plane tables on the dense engine) and
+    ``decisions`` memoizes the cost-based planner's physical-plan choice
+    per (expression, endpoint-binding) class — see :func:`decision_key`;
   * :class:`ResultCache` — cross-request memo of *finished answers*,
     keyed by normalized AST + endpoint binding, LRU with size/TTL bounds.
     A replayed request skips evaluation entirely;
@@ -58,9 +61,55 @@ def as_query(q: QueryLike) -> Query:
 
 
 def normalized_key(expr: Union[str, rx.Node]) -> str:
-    """Canonical plan-cache key for an expression (parse + reprint)."""
+    """Canonical plan-/result-cache key for an expression: parse, reduce
+    to :func:`repro.core.regex.canonical` form (concatenation chains
+    right-associated, alternation operands flattened/deduped/sorted),
+    and reprint.  Equivalent spellings — ``a/b*`` vs ``(a/(b)*)``,
+    ``(a/b)/c`` vs ``a/(b/c)``, ``a|b`` vs ``b|a`` — share one entry."""
     ast = rx.parse(expr) if isinstance(expr, str) else expr
-    return str(ast)
+    return str(rx.canonical(ast))
+
+
+def decision_key(expr: Union[str, rx.Node], subject_bound: bool,
+                 obj_bound: bool, policy: str) -> Tuple:
+    """PlanCache key for a *planner decision*.  A decision depends on the
+    expression (canonicalized), which endpoints are bound (not their
+    values), and the planner policy — so one cached decision serves every
+    request of the same (expression, binding) class."""
+    return ("decision", normalized_key(expr), subject_bound, obj_bound,
+            policy)
+
+
+@dataclass
+class QueryStats:
+    """Per-query work counters + the planner's decision record.
+
+    The traversal counters are the Theorem-4.1 accounting the ring
+    engine fills (the dense engine reports only results/cache/plan
+    fields).  ``plan_*`` fields surface what the cost-based planner
+    chose and why: the physical plan (``forward``/``reverse``/``split``,
+    or ``naive`` when planning is opted out), the split predicate (the
+    completed-graph id of the cut literal, -1 when not split), the
+    estimated cost of the chosen plan, and the estimated vs actual seed
+    frontier (predicted seed count from the selectivity stats vs the
+    seeds the executor really enqueued)."""
+
+    node_state_activations: int = 0   # |new (v, q) pairs| == |G'_E| nodes touched
+    bfs_steps: int = 0
+    wt_nodes_visited: int = 0
+    predicates_enumerated: int = 0
+    subjects_enumerated: int = 0
+    results: int = 0
+    supersteps: int = 0
+    kernel_batches: int = 0
+    kernel_tasks: int = 0
+    result_cache_hits: int = 0
+    result_cache_misses: int = 0
+    plan_mode: str = ""
+    plan_split_pred: int = -1
+    plan_est_cost: float = 0.0
+    plan_est_frontier: float = 0.0
+    plan_actual_frontier: int = 0
 
 
 _MISSING = object()

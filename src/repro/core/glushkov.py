@@ -223,6 +223,20 @@ class Glushkov:
             acc |= tbl[(X >> (8 * k)) & 0xFF]
         return acc
 
+    def first_labels(self) -> List[Label]:
+        """Labels a *forward* simulation can take on its first step
+        (symbols of the first-position states) — the predicates adjacent
+        to the initial state.  Planner cost input."""
+        first = self.follow_mask[0]
+        return [lab for lab in self.labels if self.B[lab] & first]
+
+    def last_labels(self) -> List[Label]:
+        """Labels a *backward* simulation can take on its first step
+        (symbols of the final states, eps bit stripped) — the predicates
+        adjacent to the final states.  Planner cost input."""
+        F = self.F & ~1
+        return [lab for lab in self.labels if self.B[lab] & F]
+
     def forward_step(self, D: int, c: Label) -> int:
         return self.T(D) & self.B.get(c, 0)
 

@@ -28,18 +28,7 @@ def _completed_adj(graph: LabeledGraph) -> Dict[int, List[Tuple[int, int]]]:
 
 
 def _resolve(graph: LabeledGraph):
-    P = graph.num_preds
-
-    def resolve(lit: rx.Lit) -> int:
-        if graph.pred_names is not None and not lit.name.isdigit():
-            base = graph.pred_of(lit.name, False)
-        else:
-            base = int(lit.name)
-        if lit.inverse:
-            base = base + P if base < P else base - P
-        return base
-
-    return resolve
+    return graph.resolve_lit
 
 
 def eval_oracle(

@@ -251,6 +251,58 @@ def reverse(node: Node) -> Node:
     raise TypeError(node)
 
 
+def _cat_chain(node: Node) -> list:
+    """Flatten a concatenation into its left-to-right factor list."""
+    if isinstance(node, Cat):
+        return _cat_chain(node.left) + _cat_chain(node.right)
+    return [node]
+
+
+def _alt_chain(node: Node) -> list:
+    if isinstance(node, Alt):
+        return _alt_chain(node.left) + _alt_chain(node.right)
+    return [node]
+
+
+def fold_cat(parts) -> Node:
+    """Right-associate a non-empty factor list back into a Cat chain."""
+    parts = list(parts)
+    node = parts[-1]
+    for p in reversed(parts[:-1]):
+        node = Cat(p, node)
+    return node
+
+
+def canonical(node: Node) -> Node:
+    """Semantics-preserving canonical form of an expression.
+
+    Concatenation chains are re-associated to the right and alternation
+    chains are flattened, deduplicated, and sorted by their canonical
+    printing — so every spelling of the same associativity/operand-order
+    class prints identically (``(a/b)/c`` == ``a/(b/c)``, ``a|b`` ==
+    ``b|a``).  Used by the engines' cache keys; anything keyed on
+    ``str(canonical(ast))`` is shared across equivalent spellings.
+    """
+    if isinstance(node, (Eps, Lit)):
+        return node
+    if isinstance(node, Cat):
+        return fold_cat(canonical(p) for p in _cat_chain(node))
+    if isinstance(node, Alt):
+        arms = {str(a): a for a in (canonical(x) for x in _alt_chain(node))}
+        keys = sorted(arms)
+        out = arms[keys[-1]]
+        for k in reversed(keys[:-1]):
+            out = Alt(arms[k], out)
+        return out
+    if isinstance(node, Star):
+        return Star(canonical(node.child))
+    if isinstance(node, Plus):
+        return Plus(canonical(node.child))
+    if isinstance(node, Opt):
+        return Opt(canonical(node.child))
+    raise TypeError(node)
+
+
 def nullable(node: Node) -> bool:
     """True iff the empty word is in L(E)."""
     if isinstance(node, Eps):

@@ -95,6 +95,36 @@ class LabeledGraph:
             base = int(name)
         return base + self.num_preds if inverse else base
 
+    def completed_triples(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(s, p, o) of the completion G ∪ Ĝ — every edge also reversed
+        with predicate p+P — deduplicated via the canonical (o, p, s)
+        key packing.  THE one encoding of the completion: the ring, the
+        dense graph, and the planner statistics all build from it."""
+        P, V = self.num_preds, self.num_nodes
+        s = np.concatenate([self.s, self.o])
+        p = np.concatenate([self.p, self.p + P])
+        o = np.concatenate([self.o, self.s])
+        key = (o * (2 * P) + p) * V + s
+        uniq = np.unique(key)
+        o = (uniq // (2 * P * V)).astype(np.int64)
+        rem = uniq % (2 * P * V)
+        p = (rem // V).astype(np.int64)
+        s = (rem % V).astype(np.int64)
+        return s, p, o
+
+    def resolve_lit(self, lit) -> int:
+        """Regex literal (:class:`repro.core.regex.Lit`) -> completed id;
+        ``^p`` flips across the completion boundary.  The single
+        resolution rule every engine, oracle, and the planner share."""
+        if self.pred_names is not None and not lit.name.isdigit():
+            base = self.pred_of(lit.name, False)
+        else:
+            base = int(lit.name)
+        if lit.inverse:
+            base = base + self.num_preds if base < self.num_preds \
+                else base - self.num_preds
+        return base
+
 
 class Ring:
     """The ring index over the completed graph G ∪ Ĝ."""
@@ -106,18 +136,11 @@ class Ring:
         self.num_preds = P
         self.num_preds_completed = 2 * P
 
-        # completion: add (o, p+P, s) for every (s,p,o)
-        s = np.concatenate([graph.s, graph.o])
-        p = np.concatenate([graph.p, graph.p + P])
-        o = np.concatenate([graph.o, graph.s])
-        # the ring is a *set* of triples — dedupe (relevant for tests with
-        # random multigraphs; real dict-encoded data is already a set)
-        key = (o * (2 * P) + p) * V + s
-        uniq = np.unique(key)
-        o = (uniq // (2 * P * V)).astype(np.int64)
-        rem = uniq % (2 * P * V)
-        p = (rem // V).astype(np.int64)
-        s = (rem % V).astype(np.int64)
+        # completion: add (o, p+P, s) for every (s,p,o); the ring is a
+        # *set* of triples — completed_triples dedupes (relevant for
+        # tests with random multigraphs; real dict-encoded data is
+        # already a set)
+        s, p, o = graph.completed_triples()
         self.n = int(s.size)
 
         # L_p: triples sorted by (o, s, p) — np.lexsort: last key is primary
@@ -169,17 +192,4 @@ class Ring:
 
     def triples_completed(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Reconstruct the completed triple set (for tests/oracle)."""
-        # invert: objects from C_o, then (s,p) from the osp sort
-        o = np.repeat(np.arange(self.num_nodes), np.diff(self.C_o))
-        # L_p gives p in osp order; recover s via LF to L_s
-        # simpler: recompute from graph
-        g = self.graph
-        s = np.concatenate([g.s, g.o])
-        p = np.concatenate([g.p, g.p + self.num_preds])
-        o = np.concatenate([g.o, g.s])
-        key = (o * (2 * self.num_preds) + p) * self.num_nodes + s
-        uniq = np.unique(key)
-        V, P2 = self.num_nodes, 2 * self.num_preds
-        o = (uniq // (P2 * V)).astype(np.int64)
-        rem = uniq % (P2 * V)
-        return (rem % V).astype(np.int64), (rem // V).astype(np.int64), o
+        return self.graph.completed_triples()

@@ -40,6 +40,18 @@ solo FIFO order, every job's results and traversal work counters
 kernel-vs-scalar threshold is decided on the *merged* task list the jobs
 actually share.
 
+Above the traversal machinery sits the cost-based planner
+(:mod:`repro.core.planner`): per (expression, endpoint-binding) class it
+chooses the ``forward`` native direction, a ``reverse`` plan seeded from
+the other endpoint over the reversed automaton, or a ``split`` plan that
+cuts ``E = A/p/B`` at a rare mandatory predicate, seeds from p's edge
+occurrences, and joins two half-traversals (union halves run as ONE
+multi-seed job with shared visited masks; the unanchored join keeps
+per-endpoint jobs, all bundled into one lockstep wavefront).  Decisions
+are memoized per canonical AST + binding in the ``decisions`` cache and
+recorded in ``QueryStats.plan_*``; ``planner="naive"`` bypasses the
+planner entirely and is the parity reference.
+
 A subject is reported when the initial NFA state activates.  Visited-mask
 soundness note: the paper stores at every internal L_s node v a mask D[v]
 (the intersection of leaf masks below) and updates it with D[v] |= D on
@@ -58,28 +70,19 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from . import planner as qp
 from . import regex as rx
-from .engines import (PlanBundle, PlanCache, QueryLike, ResultCache,
-                      as_query, probe_result_cache, publish_result)
+from .engines import (PlanBundle, PlanCache, QueryLike, QueryStats,
+                      ResultCache, as_query, normalized_key,
+                      probe_result_cache, publish_result)
 from .glushkov import Glushkov
 from .ring import Ring
+from .stats import GraphStats
+
+__all__ = ["QueryStats", "RingRPQ"]  # QueryStats re-exported (engines.py)
 
 
-@dataclass
-class QueryStats:
-    """Work counters used by the Theorem-4.1 complexity benchmark."""
-
-    node_state_activations: int = 0   # |new (v, q) pairs| == |G'_E| nodes touched
-    bfs_steps: int = 0
-    wt_nodes_visited: int = 0
-    predicates_enumerated: int = 0
-    subjects_enumerated: int = 0
-    results: int = 0
-    supersteps: int = 0
-    kernel_batches: int = 0
-    kernel_tasks: int = 0
-    result_cache_hits: int = 0
-    result_cache_misses: int = 0
+_isin = qp.isin_mask
 
 
 @dataclass
@@ -92,13 +95,19 @@ class _RingPlan:
 
 @dataclass
 class _Job:
-    """One traversal of the multi-job wavefront (``_traverse_many``)."""
+    """One traversal of the multi-job wavefront (``_traverse_many``).
+
+    ``start_obj`` seeds one object; ``start_objs`` seeds several with a
+    shared visited mask (union semantics — a split plan's half-traversal
+    from all surviving seed endpoints); both ``None`` = the full range.
+    """
 
     plan: _RingPlan
     start_obj: Optional[int]
     stats: QueryStats
     target: Optional[int] = None
     limit: Optional[int] = None
+    start_objs: Optional[Sequence[int]] = None
     offset: int = 0                     # block-diagonal bit offset
     done: bool = False
     Ds: Dict[int, int] = field(default_factory=dict)
@@ -116,20 +125,45 @@ class RingRPQ:
     NFA transition through the Pallas kernel; ``None`` auto-resolves (on
     TPU backends a small threshold, elsewhere scalar tables, which beat
     interpret-mode kernels on the host).
+
+    ``planner``: "cost" (default) consults the cost-based planner
+    (:mod:`repro.core.planner`) per query class and may run a
+    ``reverse`` or ``split`` physical plan; "forward"/"reverse"/"split"
+    force one shape (falling back to forward when inapplicable);
+    "naive" opts out entirely — exactly the pre-planner behavior, kept
+    as the parity reference.  ``stats``: injectable
+    :class:`~repro.core.stats.GraphStats` (e.g. restored from a
+    checkpoint); harvested from the ring on first use otherwise.
     """
 
     def __init__(self, ring: Ring, paper_dv: bool = False,
                  wavefront: bool = True,
                  kernel_threshold: Optional[int] = None,
-                 result_cache: Optional[ResultCache] = None):
+                 result_cache: Optional[ResultCache] = None,
+                 planner: str = "cost",
+                 stats: Optional[GraphStats] = None):
+        if planner not in ("cost", "naive", "forward", "reverse", "split"):
+            raise ValueError(f"unknown planner policy {planner!r}")
         self.ring = ring
         self.paper_dv = paper_dv
         self.wavefront = wavefront
         self.kernel_threshold = kernel_threshold
+        self.planner = planner
         self.plans = PlanCache()
+        self.decisions = PlanCache()
         self.results = result_cache if result_cache is not None else ResultCache()
         self.bundle_kernel_batches = 0   # multi-plan nfa_step dispatches
         self._auto_threshold: Optional[float] = None
+        self._stats = stats
+        self._edge_s: Optional[np.ndarray] = None   # completed triples,
+        self._edge_o: Optional[np.ndarray] = None   # predicate-major order
+
+    @property
+    def graph_stats(self) -> GraphStats:
+        """Selectivity statistics for the planner (lazy; injectable)."""
+        if self._stats is None:
+            self._stats = GraphStats.from_ring(self.ring)
+        return self._stats
 
     # -- public API ----------------------------------------------------------
     def eval(
@@ -194,16 +228,22 @@ class RingRPQ:
             q = qs[idxs[0]]
             stats = stats_list[idxs[0]]
             ast = rx.parse(q.expr)
-            if q.subject is None and q.obj is None:
-                # (x, E, y) two-phase: phase 2 depends on phase 1's
-                # output, so it cannot join the lockstep wavefront —
-                # but it still draws on the shared batch deadline
+            qplan = self._decide(ast, q.subject is not None,
+                                 q.obj is not None, stats)
+            if (q.subject is None and q.obj is None) \
+                    or qplan.mode == "split":
+                # (x, E, y) two-phase and split plans have a second
+                # stage that depends on the first stage's output, so
+                # they cannot join the lockstep wavefront — but they
+                # still draw on the shared batch deadline.  The result
+                # is keyed on the ORIGINAL normalized AST + endpoints
+                # (``key``), never the rewritten plan's expression.
                 remaining = None
                 if deadline is not None:
                     remaining = deadline - _time.time()
                     if remaining <= 0:
                         raise TimeoutError("query deadline exceeded")
-                res = self.eval_ast(ast, None, None, q.limit, stats,
+                res = self.eval_ast(ast, q.subject, q.obj, q.limit, stats,
                                     remaining)
                 publish_result(self.results, key, res, idxs, results)
                 continue
@@ -216,12 +256,18 @@ class RingRPQ:
                         res = set(list(res)[: q.limit])
                     publish_result(self.results, key, res, idxs, results)
                     continue
-                p_bwd = self._plan(ast)
-                p_fwd = self._plan(rx.reverse(ast))
-                if self._start_cost(p_bwd.g) <= self._start_cost(p_fwd.g):
-                    plan, start, tgt = p_bwd, q.obj, q.subject
-                else:
-                    plan, start, tgt = p_fwd, q.subject, q.obj
+                if qplan.mode == "reverse":
+                    plan, start, tgt = (self._plan(rx.reverse(ast)),
+                                        q.subject, q.obj)
+                elif qplan.mode == "forward":
+                    plan, start, tgt = self._plan(ast), q.obj, q.subject
+                else:                                     # naive
+                    p_bwd = self._plan(ast)
+                    p_fwd = self._plan(rx.reverse(ast))
+                    if self._start_cost(p_bwd.g) <= self._start_cost(p_fwd.g):
+                        plan, start, tgt = p_bwd, q.obj, q.subject
+                    else:
+                        plan, start, tgt = p_fwd, q.subject, q.obj
                 job = _Job(plan=plan, start_obj=start, stats=stats,
                            target=tgt)
             elif q.obj is not None:                       # (x, E, o)
@@ -230,6 +276,7 @@ class RingRPQ:
             else:                                         # (s, E, y)
                 job = _Job(plan=self._plan(rx.reverse(ast)),
                            start_obj=q.subject, stats=stats, limit=q.limit)
+            stats.plan_actual_frontier = 1
             jobs.append((key, q, ast, job))
 
         if jobs:
@@ -267,58 +314,88 @@ class RingRPQ:
         V = self.ring.num_nodes
         out: Set[Tuple[int, int]] = set()
         null = rx.nullable(ast)
+        plan = self._decide(ast, subject is not None, obj is not None, stats)
 
         if subject is None and obj is None:
-            # (x, E, y) — Sec. 4.4 two-phase strategy
+            # (x, E, y) — Sec. 4.4 two-phase strategy (or a planner
+            # rewrite: objects-first two-phase, or the rare-predicate
+            # split — both return the same pairs)
             if null:
                 out.update((v, v) for v in range(V))
-            # phase 1: from the full L_p range, find subjects reaching
-            # *some* object...
-            p_bwd = self._plan(ast)
-            sources = self._traverse(
-                p_bwd, start_obj=None, stats=stats
-            )
-            # phase 2: from each such subject, run (s, E, y)
-            p_fwd = self._plan(rx.reverse(ast))
-            for s in sorted(sources):
-                objs = self._traverse(
-                    p_fwd, start_obj=s, stats=stats
+            if plan.mode == "split":
+                out.update(self._split_unanchored(plan, stats, limit=limit))
+            elif plan.mode == "reverse":
+                out.update(self._unanchored_reverse(ast, stats, limit=limit))
+            else:
+                # phase 1: from the full L_p range, find subjects reaching
+                # *some* object...
+                p_bwd = self._plan(ast)
+                sources = self._traverse(
+                    p_bwd, start_obj=None, stats=stats
                 )
-                out.update((s, o) for o in objs)
-                if limit is not None and len(out) >= limit:
-                    return set(list(out)[:limit])
+                stats.plan_actual_frontier = len(sources)
+                # phase 2: from each such subject, run (s, E, y)
+                p_fwd = self._plan(rx.reverse(ast))
+                for s in sorted(sources):
+                    objs = self._traverse(
+                        p_fwd, start_obj=s, stats=stats
+                    )
+                    out.update((s, o) for o in objs)
+                    if limit is not None and len(out) >= limit:
+                        return set(list(out)[:limit])
         elif subject is None:
             # (x, E, o): backward from o
             if null:
                 out.add((obj, obj))
-            p_bwd = self._plan(ast)
-            srcs = self._traverse(p_bwd, start_obj=obj, stats=stats,
-                                  limit=limit)
-            out.update((s, obj) for s in srcs)
+            if plan.mode == "split":
+                out.update((s, obj) for s in
+                           self._split_from_obj(plan, obj, stats,
+                                                limit=limit))
+            else:
+                p_bwd = self._plan(ast)
+                srcs = self._traverse(p_bwd, start_obj=obj, stats=stats,
+                                      limit=limit)
+                stats.plan_actual_frontier = 1
+                out.update((s, obj) for s in srcs)
         elif obj is None:
             # (s, E, y) == (y, ^E, s) backward from s
             if null:
                 out.add((subject, subject))
-            p_fwd = self._plan(rx.reverse(ast))
-            objs = self._traverse(p_fwd, start_obj=subject, stats=stats,
-                                  limit=limit)
-            out.update((subject, o) for o in objs)
+            if plan.mode == "split":
+                out.update((subject, o) for o in
+                           self._split_from_subj(plan, subject, stats,
+                                                 limit=limit))
+            else:
+                p_fwd = self._plan(rx.reverse(ast))
+                objs = self._traverse(p_fwd, start_obj=subject, stats=stats,
+                                      limit=limit)
+                stats.plan_actual_frontier = 1
+                out.update((subject, o) for o in objs)
         else:
-            # (s, E, o) both fixed: pick the cheaper direction (Sec. 5:
-            # "start from the end whose predicate has the smallest
-            # cardinality" — the C_p array gives cardinalities in O(1)),
-            # early-exit on the target
+            # (s, E, o) both fixed: the planner picks the start endpoint
+            # ("naive" keeps the Sec.-5 heuristic: start from the end
+            # whose adjacent predicates have the smallest cardinality,
+            # O(1) C_p reads); early-exit on the target
             if null and subject == obj:
                 out.add((subject, obj))
+            elif plan.mode == "split":
+                if self._split_both(plan, subject, obj, stats):
+                    out.add((subject, obj))
             else:
-                p_bwd = self._plan(ast)
-                p_fwd = self._plan(rx.reverse(ast))
-                if self._start_cost(p_bwd.g) <= self._start_cost(p_fwd.g):
-                    p, start, tgt = p_bwd, obj, subject
-                else:
-                    p, start, tgt = p_fwd, subject, obj
+                if plan.mode == "reverse":
+                    p, start, tgt = self._plan(rx.reverse(ast)), subject, obj
+                elif plan.mode == "forward":
+                    p, start, tgt = self._plan(ast), obj, subject
+                else:                                          # naive
+                    p_bwd = self._plan(ast)
+                    p_fwd = self._plan(rx.reverse(ast))
+                    if self._start_cost(p_bwd.g) <= self._start_cost(p_fwd.g):
+                        p, start, tgt = p_bwd, obj, subject
+                    else:
+                        p, start, tgt = p_fwd, subject, obj
                 found = self._traverse(p, start_obj=start, stats=stats,
                                        target=tgt)
+                stats.plan_actual_frontier = 1
                 if tgt in found:
                     out.add((subject, obj))
         stats.results = len(out)
@@ -331,37 +408,209 @@ class RingRPQ:
         """Sum of cardinalities of the predicates adjacent to the final
         states — the edges the *first* backward step can touch (Sec. 5
         planning heuristic; C_p lookups are O(1))."""
-        D0 = g.F & ~1
         total = 0
-        for p, mask in g.B.items():
-            if mask & D0 and 0 <= p < self.ring.num_preds_completed:
+        for p in g.last_labels():
+            if 0 <= p < self.ring.num_preds_completed:
                 total += self.ring.pred_cardinality(p)
         return total
 
+    def _resolve_lit(self, lit: rx.Lit) -> int:
+        return self.ring.graph.resolve_lit(lit)
+
     def _automaton(self, ast) -> Glushkov:
-        ring = self.ring
-        P = ring.num_preds
-
-        def resolve(lit: rx.Lit) -> int:
-            if ring.graph.pred_names is not None and not lit.name.isdigit():
-                base = ring.graph.pred_of(lit.name, False)
-            else:
-                base = int(lit.name)
-            if lit.inverse:
-                base = base + P if base < P else base - P
-            return base
-
-        return Glushkov.from_ast(ast, resolve)
+        return Glushkov.from_ast(ast, self._resolve_lit)
 
     def _plan(self, ast) -> _RingPlan:
         """Automaton + B[v] table for ``ast``, shared via the plan cache
-        (keyed by the canonical printed AST)."""
+        (keyed by the canonical AST, so equivalent spellings share)."""
 
         def build():
             g = self._automaton(ast)
             return _RingPlan(g=g, Bv=self._build_Bv(g))
 
-        return self.plans.get(str(ast), build)
+        return self.plans.get(normalized_key(ast), build)
+
+    def _decide(self, ast, subject_bound: bool, obj_bound: bool,
+                stats: QueryStats) -> qp.Plan:
+        """Planner decision for this (expression, binding) class, memoized
+        in the ``decisions`` PlanCache; records the choice in ``stats``."""
+        return qp.decide(ast, subject_bound, obj_bound,
+                         policy=self.planner, decisions=self.decisions,
+                         stats_provider=lambda: self.graph_stats,
+                         resolve=self._resolve_lit, record=stats)
+
+    # -- split / reverse plan execution ----------------------------------------
+    def _pred_edges(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(subjects, objects) of the completed triples labeled ``p`` —
+        the seed edges of a split plan.  Materialized predicate-major on
+        first use; C_p gives the block offsets."""
+        if self._edge_s is None:
+            s, pa, o = self.ring.triples_completed()
+            order = np.argsort(pa, kind="stable")
+            self._edge_s, self._edge_o = s[order], o[order]
+        if not (0 <= p < self.ring.num_preds_completed):
+            z = np.zeros(0, dtype=np.int64)
+            return z, z
+        b, e = self.ring.pred_range(p)
+        return self._edge_s[b:e], self._edge_o[b:e]
+
+    def _half_union(self, side_ast, seeds, stats: QueryStats,
+                    reverse: bool = False,
+                    target: Optional[int] = None,
+                    limit: Optional[int] = None) -> Set[int]:
+        """Union half-traversal of a split plan: nodes related to *some*
+        seed through ``side_ast`` (reversed for the subject-side half),
+        including the seeds themselves when the half matches the empty
+        word.  One multi-seed job — shared visited masks, since only the
+        union matters.  ``limit`` stops the traversal once that many
+        nodes are reported (only for the half that produces answers)."""
+        seeds = [int(x) for x in seeds]
+        if side_ast is None:
+            return set(seeds)
+        ast = rx.reverse(side_ast) if reverse else side_ast
+        job = _Job(plan=self._plan(ast), start_obj=None, stats=stats,
+                   target=target, limit=limit, start_objs=seeds)
+        self._traverse_many([job], deadline=getattr(self, "_deadline", None))
+        out = set(job.reported)
+        if rx.nullable(side_ast):
+            out.update(seeds)
+        return out
+
+    def _split_from_obj(self, plan: qp.Plan, obj: int, stats: QueryStats,
+                        limit: Optional[int] = None) -> Set[int]:
+        """(x, E=A/p/B, o): subjects s with s -A-> sp -p-> op -B-> o.
+        Right half from o confines the seed edges; left half is one
+        union traversal from the surviving subjects of p (it produces
+        the answers, so it honors ``limit``)."""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        if sarr.size == 0:
+            stats.plan_actual_frontier = 0
+            return set()
+        U = self._half_union(sp.right, [obj], stats)
+        keep = _isin(oarr, U)
+        stats.plan_actual_frontier = int(keep.sum())
+        seeds = np.unique(sarr[keep])
+        if seeds.size == 0:
+            return set()
+        return self._half_union(sp.left, seeds, stats, limit=limit)
+
+    def _split_from_subj(self, plan: qp.Plan, subject: int,
+                         stats: QueryStats,
+                         limit: Optional[int] = None) -> Set[int]:
+        """(s, E=A/p/B, y): objects o with s -A-> sp -p-> op -B-> o."""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        if sarr.size == 0:
+            stats.plan_actual_frontier = 0
+            return set()
+        Vs = self._half_union(sp.left, [subject], stats, reverse=True)
+        keep = _isin(sarr, Vs)
+        stats.plan_actual_frontier = int(keep.sum())
+        ops = np.unique(oarr[keep])
+        if ops.size == 0:
+            return set()
+        return self._half_union(sp.right, ops, stats, reverse=True,
+                                limit=limit)
+
+    def _split_both(self, plan: qp.Plan, subject: int, obj: int,
+                    stats: QueryStats) -> bool:
+        """(s, E=A/p/B, o): does any seed edge connect the halves?"""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        if sarr.size == 0:
+            stats.plan_actual_frontier = 0
+            return False
+        U = self._half_union(sp.right, [obj], stats)
+        keep = _isin(oarr, U)
+        stats.plan_actual_frontier = int(keep.sum())
+        seeds = np.unique(sarr[keep])
+        if seeds.size == 0:
+            return False
+        return subject in self._half_union(sp.left, seeds, stats,
+                                           target=subject)
+
+    def _split_unanchored(self, plan: qp.Plan, stats: QueryStats,
+                          limit: Optional[int] = None) -> Set[Tuple[int, int]]:
+        """(x, E=A/p/B, y): meet in the middle at p's edge occurrences.
+        Per-endpoint half-traversals (one lockstep wavefront for ALL of
+        them, left and right plans bundled block-diagonally) joined
+        through the seed edges — answer pairs need the SAME edge, so the
+        halves stay grouped by endpoint, unlike the union case."""
+        sp = plan.split
+        sarr, oarr = self._pred_edges(plan.split_pred)
+        stats.plan_actual_frontier = int(sarr.size)
+        if sarr.size == 0:
+            return set()
+        jobs: List[_Job] = []
+        left_jobs: Dict[int, _Job] = {}
+        if sp.left is not None:
+            lplan = self._plan(sp.left)
+            for u in np.unique(sarr).tolist():
+                left_jobs[u] = _Job(plan=lplan, start_obj=u, stats=stats)
+                jobs.append(left_jobs[u])
+        right_jobs: Dict[int, _Job] = {}
+        if sp.right is not None:
+            rplan = self._plan(rx.reverse(sp.right))
+            for u in np.unique(oarr).tolist():
+                right_jobs[u] = _Job(plan=rplan, start_obj=u, stats=stats)
+                jobs.append(right_jobs[u])
+        if jobs:
+            self._traverse_many(jobs,
+                                deadline=getattr(self, "_deadline", None))
+        lnull = sp.left is not None and rx.nullable(sp.left)
+        rnull = sp.right is not None and rx.nullable(sp.right)
+        out: Set[Tuple[int, int]] = set()
+        lmemo: Dict[int, Tuple[int, ...]] = {}
+        rmemo: Dict[int, Tuple[int, ...]] = {}
+        for u, v in zip(sarr.tolist(), oarr.tolist()):
+            L = lmemo.get(u)
+            if L is None:
+                if sp.left is None:
+                    L = (u,)
+                else:
+                    ls = set(left_jobs[u].reported)
+                    if lnull:
+                        ls.add(u)
+                    L = tuple(ls)
+                lmemo[u] = L
+            R = rmemo.get(v)
+            if R is None:
+                if sp.right is None:
+                    R = (v,)
+                else:
+                    rs = set(right_jobs[v].reported)
+                    if rnull:
+                        rs.add(v)
+                    R = tuple(rs)
+                rmemo[v] = R
+            for a in L:
+                for b in R:
+                    out.add((a, b))
+            if limit is not None and len(out) >= limit:
+                return out
+        return out
+
+    def _unanchored_reverse(self, ast, stats: QueryStats,
+                            limit: Optional[int] = None) -> Set[Tuple[int, int]]:
+        """(x, E, y) objects-first: phase 1 enumerates the objects (the
+        subjects of ^E), phase 2 completes every object from its own side
+        — batched as one multi-job wavefront instead of a per-source
+        loop.  Wins when distinct objects are the scarce side."""
+        objs = sorted(self._traverse(self._plan(rx.reverse(ast)),
+                                     start_obj=None, stats=stats))
+        stats.plan_actual_frontier = len(objs)
+        p_bwd = self._plan(ast)
+        jobs = [_Job(plan=p_bwd, start_obj=o, stats=stats) for o in objs]
+        if jobs:
+            self._traverse_many(jobs,
+                                deadline=getattr(self, "_deadline", None))
+        out: Set[Tuple[int, int]] = set()
+        for o, job in zip(objs, jobs):
+            out.update((s, o) for s in job.reported)
+            if limit is not None and len(out) >= limit:
+                break
+        return out
 
     def _build_Bv(self, g: Glushkov) -> Dict[Tuple[int, int], int]:
         """Sparse B[v] masks for the L_p wavelet-tree nodes (Sec. 4.1):
@@ -511,7 +760,13 @@ class RingRPQ:
             if D0 == 0:
                 job.done = True
                 continue
-            if job.start_obj is None:
+            if job.start_objs is not None:
+                # multi-seed union job (split-plan half): every seed
+                # starts with D0 under one shared visited mask
+                for v in job.start_objs:
+                    job.Ds[v] = D0
+                    queue.append((job, ring.object_range(v), D0))
+            elif job.start_obj is None:
                 queue.append((job, ring.full_range(), D0))
             else:
                 job.Ds[job.start_obj] = D0

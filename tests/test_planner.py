@@ -1,0 +1,296 @@
+"""Cost-based query planner: selectivity stats, plan-shape parity on both
+engines, canonical cache keys, and result-cache keying for rewritten
+plans."""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from helpers import rand_expr_ast
+from repro.core import planner as qp
+from repro.core import regex as rx
+from repro.core.dense import DenseRPQ
+from repro.core.engines import Query, make_engine, normalized_key
+from repro.core.fixtures import metro_graph, random_graph
+from repro.core.oracle import eval_oracle
+from repro.core.ring import LabeledGraph, Ring
+from repro.core.rpq import QueryStats, RingRPQ
+from repro.core.stats import GraphStats
+
+
+def _chain_expr(rnd, npred):
+    """Random top-level concatenation chain with >= 1 bare literal, so a
+    split candidate always exists."""
+    parts = [str(rand_expr_ast(rnd, 1, npred)) for _ in range(rnd.randrange(0, 2))]
+    parts.append(str(rnd.randrange(npred)))          # guaranteed cut point
+    parts += [str(rand_expr_ast(rnd, 1, npred)) for _ in range(rnd.randrange(0, 2))]
+    return "/".join(f"({p})" for p in parts)
+
+
+# --------------------------------------------------------------------------
+# plan-shape parity
+# --------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_planner_parity_all_plan_shapes(seed):
+    """Property: every plan shape (forced forward/reverse/split and the
+    cost-chosen one), on both engines, returns exactly the answers of the
+    planner="naive" sequential reference (== the oracle) — and on the
+    ring, wavefront and sequential runs of the SAME plan shape do the
+    same Theorem-4.1 work (node_state_activations)."""
+    rnd = random.Random(seed)
+    V = rnd.randrange(6, 11)
+    g = random_graph(V, 3, rnd.randrange(10, 35), seed=seed % 997,
+                     pred_zipf=False)
+    ring = Ring(g)
+    exprs = [str(rand_expr_ast(rnd, 2, 3)), _chain_expr(rnd, 3)]
+    bindings = [(None, None), (None, 0), (0, None), (0, min(1, V - 1))]
+    for expr in exprs:
+        for (sub, ob) in bindings:
+            ref = RingRPQ(ring, planner="naive", wavefront=False)
+            want = ref.eval(expr, subject=sub, obj=ob)
+            assert want == eval_oracle(g, expr, subject=sub, obj=ob)
+            for mode in ("forward", "reverse", "split", "cost"):
+                wf_stats, seq_stats = QueryStats(), QueryStats()
+                wf = RingRPQ(ring, planner=mode).eval(
+                    expr, subject=sub, obj=ob, stats=wf_stats)
+                seq = RingRPQ(ring, planner=mode, wavefront=False).eval(
+                    expr, subject=sub, obj=ob, stats=seq_stats)
+                assert wf == want, (mode, expr, sub, ob)
+                assert seq == want, (mode, expr, sub, ob)
+                assert wf_stats.node_state_activations == \
+                    seq_stats.node_state_activations, (mode, expr, sub, ob)
+                assert DenseRPQ(g, planner=mode).eval(
+                    expr, subject=sub, obj=ob) == want, (mode, expr, sub, ob)
+
+
+def test_eval_many_planner_batch_matches_eval():
+    """Planner-threaded eval_many (including forced reverse/split paths)
+    equals per-query eval on both engines."""
+    rnd = random.Random(31)
+    g = random_graph(12, 3, 45, seed=8, pred_zipf=False)
+    queries = []
+    for i in range(12):
+        expr = _chain_expr(rnd, 3) if i % 2 else str(rand_expr_ast(rnd, 2, 3))
+        kind = i % 4
+        if kind == 0:
+            queries.append(Query(expr, obj=rnd.randrange(12)))
+        elif kind == 1:
+            queries.append(Query(expr, subject=rnd.randrange(12)))
+        elif kind == 2:
+            queries.append(Query(expr, subject=rnd.randrange(12),
+                                 obj=rnd.randrange(12)))
+        else:
+            queries.append(Query(expr))
+    for kind in ("ring", "dense"):
+        for mode in ("cost", "reverse", "split"):
+            eng = make_engine(g, kind, planner=mode)
+            got = eng.eval_many(queries)
+            for q, r in zip(queries, got):
+                assert r == eval_oracle(g, q.expr, subject=q.subject,
+                                        obj=q.obj), (kind, mode, q)
+
+
+# --------------------------------------------------------------------------
+# selectivity stats
+# --------------------------------------------------------------------------
+def test_graph_stats_ring_and_graph_agree():
+    g = random_graph(30, 4, 120, seed=3)
+    stats_r = GraphStats.from_ring(Ring(g))
+    stats_g = GraphStats.from_graph(g)
+    assert stats_r.num_edges == stats_g.num_edges
+    assert np.array_equal(stats_r.freq, stats_g.freq)
+    assert np.array_equal(stats_r.distinct_subj, stats_g.distinct_subj)
+    assert np.array_equal(stats_r.distinct_obj, stats_g.distinct_obj)
+    # completion mirror: distinct objects of p == distinct subjects of ^p
+    P = g.num_preds
+    assert np.array_equal(stats_r.distinct_obj[:P],
+                          stats_r.distinct_subj[P:])
+
+
+def test_graph_stats_checkpoint_roundtrip(tmp_path):
+    """Stats serialize with checkpoints and a restored engine plans
+    without rescanning the graph."""
+    from repro import checkpoint as ckpt
+    g = random_graph(25, 3, 90, seed=5)
+    ring = Ring(g)
+    stats = GraphStats.from_ring(ring)
+    ckpt.save(str(tmp_path), 7, stats.to_state())
+    restored_state, _ = ckpt.restore(str(tmp_path), stats.to_state())
+    restored = GraphStats.from_state(restored_state)
+    assert restored.num_nodes == stats.num_nodes
+    assert restored.num_edges == stats.num_edges
+    assert np.array_equal(restored.freq, stats.freq)
+    assert np.array_equal(restored.distinct_subj, stats.distinct_subj)
+    # an engine with injected (restored) stats makes the same decisions
+    fresh, injected = RingRPQ(ring), RingRPQ(ring, stats=restored)
+    for expr, sub, ob in [("0/1", None, None), ("0*/2", None, 3),
+                          ("1/0*", 2, 5)]:
+        ast = rx.parse(expr)
+        a = fresh._decide(ast, sub is not None, ob is not None, QueryStats())
+        b = injected._decide(ast, sub is not None, ob is not None,
+                             QueryStats())
+        assert (a.mode, a.split_pred) == (b.mode, b.split_pred)
+    assert injected._stats is restored   # never rebuilt from the ring
+
+
+# --------------------------------------------------------------------------
+# planner internals
+# --------------------------------------------------------------------------
+def test_first_last_labels_match_ast_analyses():
+    """The automaton-level entry/exit labels (glushkov.first_labels /
+    last_labels) agree with the planner's AST-level first_lits/last_lits
+    — the two views of the same cost-model input."""
+    from repro.core.glushkov import Glushkov
+    rnd = random.Random(17)
+    resolve = lambda lit: (lit.name, lit.inverse)
+    for _ in range(25):
+        ast = rand_expr_ast(rnd, 3, 3)
+        g = Glushkov.from_ast(ast, resolve)
+        assert set(g.first_labels()) == {resolve(l) for l in qp.first_lits(ast)}
+        assert set(g.last_labels()) == {resolve(l) for l in qp.last_lits(ast)}
+
+
+def test_split_candidates_structure():
+    ast = rx.parse("0*/1/(2|0)/3")
+    cands = qp.split_candidates(ast)
+    assert [c.lit.name for c in cands] == ["1", "3"]
+    first = cands[0]
+    assert str(first.left) == "(0)*"
+    assert str(first.right) == "((2|0)/3)"
+    last = cands[1]
+    assert last.right is None
+    # no top-level concatenation -> no candidates; forced split falls back
+    assert qp.split_candidates(rx.parse("(0/1)|(1/0)")) == []
+    g = random_graph(8, 2, 20, seed=1, pred_zipf=False)
+    eng = RingRPQ(Ring(g), planner="split")
+    stats = QueryStats()
+    res = eng.eval("(0/1)|(1/0)", obj=0, stats=stats)
+    assert stats.plan_mode == "forward"   # fallback recorded honestly
+    assert res == eval_oracle(g, "(0/1)|(1/0)", obj=0)
+
+
+def test_planner_splits_at_rare_predicate():
+    """A hot/rare/hot chain on a skewed graph: the cost planner cuts the
+    unanchored query at the globally least-frequent predicate and does
+    strictly less traversal work than naive."""
+    rng = np.random.default_rng(11)
+    V, E = 60, 500
+    s = rng.integers(0, V, E)
+    o = rng.integers(0, V, E)
+    p = np.zeros(E, dtype=np.int64)       # pred 0: hot
+    p[:3] = 1                             # pred 1: three rare edges
+    g = LabeledGraph.from_arrays(s, p, o, V, 2)
+    ring = Ring(g)
+    expr = "0/1/0"
+    naive_stats, cost_stats = QueryStats(), QueryStats()
+    want = RingRPQ(ring, planner="naive").eval(expr, stats=naive_stats)
+    got = RingRPQ(ring, planner="cost").eval(expr, stats=cost_stats)
+    assert got == want
+    assert cost_stats.plan_mode == "split"
+    assert cost_stats.plan_split_pred == 1            # the rare predicate
+    assert cost_stats.plan_est_frontier == GraphStats.from_ring(ring).freq[1]
+    assert cost_stats.plan_actual_frontier <= cost_stats.plan_est_frontier
+    assert cost_stats.node_state_activations < \
+        naive_stats.node_state_activations
+    # dense engine surfaces the same decision through its stats hook
+    dstats = QueryStats()
+    assert DenseRPQ(g).eval(expr, stats=dstats) == want
+    assert (dstats.plan_mode, dstats.plan_split_pred) == ("split", 1)
+
+
+def test_unknown_predicate_raises_regardless_of_policy_and_binding():
+    """A typo'd predicate name raises under every planner policy and
+    binding pattern — the planner must not swallow resolution errors
+    into a silent empty result (out-of-range numeric ids, by contrast,
+    legitimately mean 'no such edges' and return empty everywhere)."""
+    g = metro_graph()
+    for policy in ("naive", "cost", "forward", "reverse", "split"):
+        eng = RingRPQ(Ring(g), planner=policy)
+        for (sub, ob) in [(None, None), (None, 0), (0, None), (0, 1)]:
+            with pytest.raises(KeyError):
+                eng.eval("l5/bogus/l5", subject=sub, obj=ob)
+            assert eng.eval("l5/99/l5", subject=sub, obj=ob) == set(), policy
+
+
+def test_plan_decision_surfaced_in_stats():
+    g = metro_graph()
+    eng = RingRPQ(Ring(g))
+    stats = QueryStats()
+    eng.eval("l5+/bus", obj=0, stats=stats)
+    assert stats.plan_mode in ("forward", "reverse", "split")
+    assert stats.plan_est_cost > 0
+    assert stats.plan_est_frontier >= 1
+    assert stats.plan_actual_frontier >= 0
+    # eval_many stats rows carry the decision too
+    rows = []
+    eng.eval_many([Query("l5+/bus", obj=1)], stats_out=rows)
+    assert rows[0].plan_mode in ("forward", "reverse", "split")
+    # the opt-out knob records itself
+    stats = QueryStats()
+    RingRPQ(Ring(g), planner="naive").eval("l5+/bus", obj=0, stats=stats)
+    assert stats.plan_mode == "naive"
+    with pytest.raises(ValueError):
+        RingRPQ(Ring(g), planner="bogus")
+
+
+# --------------------------------------------------------------------------
+# canonical cache keys + result-cache keying for rewritten plans
+# --------------------------------------------------------------------------
+def test_normalized_key_canonicalizes_assoc_and_alt_order():
+    # concatenation associativity
+    assert normalized_key("0/1/2") == normalized_key("(0/1)/2") \
+        == normalized_key("0/(1/2)")
+    # alternation operand order (and flattening, and duplicates)
+    assert normalized_key("0|1") == normalized_key("1|0")
+    assert normalized_key("0|(1|2)") == normalized_key("(2|1)|0")
+    assert normalized_key("0|0|1") == normalized_key("1|0")
+    # nested under closures and mixed
+    assert normalized_key("((0/1)/2)*") == normalized_key("(0/(1/2))*")
+    assert normalized_key("(1|0)/2") == normalized_key("(0|1)/2")
+    # different expressions stay distinct
+    assert normalized_key("0/1") != normalized_key("1/0")
+    assert normalized_key("0|1") != normalized_key("0/1")
+
+
+def test_plan_cache_shared_across_spellings():
+    """Equivalent spellings of one expression share PlanCache entries on
+    both engines (the pre-canonicalization code missed these)."""
+    g = random_graph(10, 3, 30, seed=2, pred_zipf=False)
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        want = eng.eval("0/1/2", obj=0)
+        m0 = eng.plans.misses
+        for spelling in ("(0/1)/2", "0/(1/2)", "((0)/(1))/2"):
+            assert eng.eval(spelling, obj=0) == want, (kind, spelling)
+        assert eng.plans.misses == m0, kind
+
+
+def test_result_cache_replays_rewritten_plan_for_forward_spelling():
+    """A reverse-plan answer is keyed on the ORIGINAL normalized AST +
+    endpoints, so the forward spelling of the same query replays it."""
+    g = metro_graph()
+    n2i = {n: i for i, n in enumerate(g.node_names)}
+    s, o = n2i["Baq"], n2i["SA"]
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind, planner="reverse")
+        first = eng.eval_many([Query("l5+/bus", subject=s, obj=o)])
+        assert eng.results.misses == 1 and eng.results.hits == 0, kind
+        # equivalent spelling, same endpoints -> pure cache replay
+        replay = eng.eval_many([Query("(l5)+/(bus)", subject=s, obj=o)])
+        assert eng.results.hits == 1, kind
+        assert replay == first == [{(s, o)}], kind
+    # same guarantee for split-rewritten plans
+    eng = make_engine(g, "ring", planner="split")
+    first = eng.eval_many([Query("l5/l5/bus", obj=o)])
+    assert eng.results.misses == 1
+    replay = eng.eval_many([Query("(l5/l5)/bus", obj=o)])
+    assert eng.results.hits == 1
+    assert replay == first
+    assert first[0] == make_engine(g, "ring", planner="naive").eval(
+        "l5/l5/bus", obj=o)
