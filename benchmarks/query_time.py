@@ -54,7 +54,10 @@ def _engines():
                                                      limit=RESULT_LIMIT,
                                                      deadline_s=TIMEOUT_S),
         "classical": lambda e, s, o: eval_oracle(g, e, s, o),
-        "dense-tpu": lambda e, s, o: dense.eval(e, s, o, limit=RESULT_LIMIT),
+        # the dense engine honors the same per-query deadline now, so a
+        # "timeout" row means the same thing on every engine column
+        "dense-tpu": lambda e, s, o: dense.eval(e, s, o, limit=RESULT_LIMIT,
+                                                deadline_s=TIMEOUT_S),
     }
 
 

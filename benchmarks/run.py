@@ -53,6 +53,8 @@ SUITES = {
                                   fromlist=["run"]).run(),
     "batch_queries": lambda: __import__("benchmarks.batch_queries",
                                         fromlist=["run"]).run(),
+    "sharded": lambda: __import__("benchmarks.sharded",
+                                  fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

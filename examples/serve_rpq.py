@@ -1,6 +1,8 @@
 """Batched RPQ serving: async admission -> heterogeneous eval_many.
 
     PYTHONPATH=src python examples/serve_rpq.py
+    # mesh-sharded: partition the batched BFS over 4 forced host devices
+    PYTHONPATH=src python examples/serve_rpq.py --force-host-devices 4 --shards 4
 
 The full serving stack the engines are built for:
 
@@ -17,11 +19,27 @@ The full serving stack the engines are built for:
   * a replayed request never reaches the BFS at all — it is answered
     straight from the result cache.
 """
+import argparse
 import asyncio
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
+
+_ap = argparse.ArgumentParser()
+_ap.add_argument("--shards", type=int, default=None,
+                 help="partition the batched BFS over N devices "
+                      "(make_engine(..., shards=N))")
+_ap.add_argument("--force-host-devices", type=int, default=None,
+                 help="force N virtual CPU devices (must be set before "
+                      "jax imports, hence an argument of this script)")
+ARGS = _ap.parse_args()
+if ARGS.force_host_devices:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ARGS.force_host_devices}"
+    ).strip()
 
 import numpy as np
 
@@ -104,7 +122,10 @@ async def _serve_wave(ctrl: AdmissionController, queries, stagger_s: float):
 
 def main():
     g = scale_free_graph(3000, 8, 24000, seed=23)
-    eng = make_engine(g, "dense", source_batch=16)
+    eng = make_engine(g, "dense", source_batch=16, shards=ARGS.shards)
+    if eng.sharded is not None:
+        print(f"mesh-sharded engine: {eng.sharded.num_shards} shards over "
+              f"axes {eng.sharded.data_axes}")
 
     # 96 "requests": 6 expressions of different shapes/sizes x 16 endpoints
     # -> every admission bucket is a *mixed-automaton* batch

@@ -37,6 +37,15 @@ carries its own B[labels, S_pad] and PRED[S_pad, S_pad] operands, and one
 vmapped BFS (``_bfs_hetero``) runs every plan at once.  Padding states
 have empty B columns and zero PRED rows, so they can never activate —
 per-row results are bit-identical to a solo run.
+
+Mesh sharding (``mesh=``/``shards=N``): the node axis of every one of
+these BFS shapes is range-partitioned over a device mesh's data axes and
+the supersteps run shard-local with one frontier all-gather per step
+(:class:`repro.core.distributed.ShardedDenseExec`); results are
+identical to single-device evaluation.  ``deadline_s`` switches the BFS
+to host-driven compiled chunks of supersteps so the wall clock is
+checked every few supersteps (sharded runs are host-stepped per
+superstep).
 """
 from __future__ import annotations
 
@@ -52,7 +61,7 @@ from . import planner as qp
 from . import regex as rx
 from .engines import (PlanCache, QueryLike, QueryStats, ResultCache,
                       as_query, normalized_key,
-                      probe_result_cache, publish_result)
+                      probe_result_cache, publish_result, truncate_result)
 from .glushkov import Glushkov
 from .ring import LabeledGraph
 from .stats import GraphStats
@@ -108,6 +117,29 @@ def _plane_tables(g: Glushkov, num_labels: int):
     return jnp.asarray(B), jnp.asarray(PRED), jnp.asarray(F)
 
 
+def _edge_scatter(subj, pred, obj, B, PRED, frontier, num_segments):
+    """The shared half of a superstep: Fact-1 edge mask -> bit-matrix
+    step -> segment-OR.  Also the sharded supersteps' local body
+    (``repro.core.distributed``), where ``frontier`` is the gathered
+    full array while the scatter targets only the shard's own rows —
+    keeping the math in ONE place is what guarantees sharded results
+    stay bit-identical to single-device runs."""
+    X = frontier[obj] * B[pred]                       # [E, S]
+    Y = (X.astype(jnp.int32) @ PRED.astype(jnp.int32)) > 0
+    scat = jax.ops.segment_max(
+        Y.astype(jnp.int8), subj, num_segments=num_segments
+    )
+    return jnp.maximum(scat, 0)
+
+
+def _step_core(subj, pred, obj, B, PRED, frontier, visited, num_nodes):
+    """One backward product-graph superstep (the docstring's four lines):
+    edge scatter, then merge into the monotone visited planes."""
+    scat = _edge_scatter(subj, pred, obj, B, PRED, frontier, num_nodes)
+    new = jnp.logical_and(scat > 0, visited == 0).astype(jnp.int8)
+    return new, visited | new
+
+
 @functools.partial(jax.jit, static_argnames=("num_nodes", "max_steps"))
 def _bfs(
     subj, pred, obj, B, PRED, start_planes, num_nodes: int, max_steps: int
@@ -117,14 +149,9 @@ def _bfs(
 
     def step(state):
         frontier, visited, it = state
-        X = frontier[obj] * B[pred]                       # [E, S]
-        Y = (X.astype(jnp.int32) @ PRED.astype(jnp.int32)) > 0
-        scat = jax.ops.segment_max(
-            Y.astype(jnp.int8), subj, num_segments=num_nodes
-        )
-        scat = jnp.maximum(scat, 0)
-        new = jnp.logical_and(scat > 0, visited == 0).astype(jnp.int8)
-        return new, visited | new, it + 1
+        new, vis = _step_core(subj, pred, obj, B, PRED, frontier, visited,
+                              num_nodes)
+        return new, vis, it + 1
 
     def cond(state):
         frontier, _, it = state
@@ -148,12 +175,9 @@ def _bfs_batched(subj, pred, obj, B, PRED, start_planes, num_nodes, max_steps):
 def _bfs_inner(subj, pred, obj, B, PRED, start_planes, num_nodes, max_steps):
     def step(state):
         frontier, visited, it = state
-        X = frontier[obj] * B[pred]
-        Y = (X.astype(jnp.int32) @ PRED.astype(jnp.int32)) > 0
-        scat = jax.ops.segment_max(Y.astype(jnp.int8), subj, num_segments=num_nodes)
-        scat = jnp.maximum(scat, 0)
-        new = jnp.logical_and(scat > 0, visited == 0).astype(jnp.int8)
-        return new, visited | new, it + 1
+        new, vis = _step_core(subj, pred, obj, B, PRED, frontier, visited,
+                              num_nodes)
+        return new, vis, it + 1
 
     def cond(state):
         frontier, _, it = state
@@ -161,6 +185,77 @@ def _bfs_inner(subj, pred, obj, B, PRED, start_planes, num_nodes, max_steps):
 
     out = jax.lax.while_loop(cond, step, (start_planes, start_planes, jnp.int32(0)))
     return out[1]
+
+
+# -- deadline-steppable variants: a compiled CHUNK of supersteps (its own
+# while_loop, capped at `chunk` trips), driven from a host loop so the
+# wall clock is checked every `chunk` supersteps — near-compiled
+# throughput, bounded deadline granularity ---------------------------------
+_DEADLINE_CHUNK = 16
+
+
+def _chunk_inner(subj, pred, obj, B, PRED, frontier, visited, num_nodes,
+                 chunk):
+    def step(state):
+        f, v, it = state
+        new, vis = _step_core(subj, pred, obj, B, PRED, f, v, num_nodes)
+        return new, vis, it + 1
+
+    def cond(state):
+        f, _, it = state
+        return jnp.logical_and(jnp.any(f > 0), it < chunk)
+
+    return jax.lax.while_loop(cond, step,
+                              (frontier, visited, jnp.int32(0)))
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "chunk"))
+def _bfs_chunk(subj, pred, obj, B, PRED, frontier, visited, num_nodes,
+               chunk):
+    return _chunk_inner(subj, pred, obj, B, PRED, frontier, visited,
+                        num_nodes, chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "chunk"))
+def _bfs_chunk_batched(subj, pred, obj, B, PRED, frontier, visited,
+                       num_nodes, chunk):
+    run = jax.vmap(
+        lambda f, v: _chunk_inner(subj, pred, obj, B, PRED, f, v,
+                                  num_nodes, chunk)
+    )
+    f, v, its = run(frontier, visited)
+    return f, v, jnp.max(its)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "chunk"))
+def _bfs_chunk_hetero(subj, pred, obj, Bstk, PREDstk, frontier, visited,
+                      num_nodes, chunk):
+    run = jax.vmap(
+        lambda B, PRED, f, v: _chunk_inner(subj, pred, obj, B, PRED, f, v,
+                                           num_nodes, chunk)
+    )
+    f, v, its = run(Bstk, PREDstk, frontier, visited)
+    return f, v, jnp.max(its)
+
+
+def _host_stepped(chunk_fn, tables, start_planes, num_nodes, max_steps,
+                  deadline):
+    """Drive compiled superstep chunks from the host, checking
+    ``deadline`` (absolute seconds) between chunks — raises the same
+    ``TimeoutError`` the ring engine uses.  Returns (visited, steps).
+    The fixed chunk size keeps compiled shapes stable; overshooting
+    ``max_steps`` by a partial chunk is harmless (the fixpoint is
+    monotone, converged chunks are no-ops)."""
+    import time as _time
+    frontier = visited = jnp.asarray(start_planes)
+    it = 0
+    while it < max_steps and bool(jnp.any(frontier > 0)):
+        if deadline is not None and _time.time() > deadline:
+            raise TimeoutError("query deadline exceeded")
+        frontier, visited, done = chunk_fn(
+            *tables, frontier, visited, num_nodes, _DEADLINE_CHUNK)
+        it += int(done)
+    return visited, it
 
 
 @functools.partial(jax.jit, static_argnames=("num_nodes", "max_steps"))
@@ -176,7 +271,7 @@ def _bfs_hetero(subj, pred, obj, Bstk, PREDstk, start_planes, num_nodes,
     return run(Bstk, PREDstk, start_planes)
 
 
-@dataclass
+@dataclass(eq=False)  # identity hash: plans key the sharded table cache
 class _DensePlan:
     """Compiled dense-side plan: automaton + device-resident bool-plane
     tables (B, PRED) — shared across queries via the plan cache."""
@@ -201,12 +296,28 @@ class DenseRPQ:
     cost-based planner may run ``reverse`` or ``split`` physical plans
     (executed with the same padded/batched BFS primitives), and
     ``planner="naive"`` keeps the pre-planner behavior.
+
+    Sharding: ``mesh=`` (a :class:`jax.sharding.Mesh`) or ``shards=N``
+    routes every BFS — single, multi-source, and heterogeneous
+    ``eval_many`` buckets, under all planner shapes — through the
+    row-partitioned sharded executor
+    (:class:`~repro.core.distributed.ShardedDenseExec`); ``data_axes``
+    names the mesh axes the node axis is split over and ``model_axis``
+    optionally edge-splits each shard for an intra-shard sweep.  Sharded
+    results are identical to single-device ``eval``.
+
+    ``deadline_s`` on :meth:`eval` (per query) and :meth:`eval_many`
+    (batch-wide, like the ring engine) raises ``TimeoutError`` — the
+    BFS is host-stepped while a deadline is active so the clock is
+    checked between supersteps.
     """
 
     def __init__(self, graph: LabeledGraph, source_batch: int = 16,
                  result_cache: Optional[ResultCache] = None,
                  planner: str = "cost",
-                 stats: Optional[GraphStats] = None):
+                 stats: Optional[GraphStats] = None,
+                 mesh=None, shards: Optional[int] = None,
+                 data_axes=None, model_axis: Optional[str] = None):
         if planner not in ("cost", "naive", "forward", "reverse", "split"):
             raise ValueError(f"unknown planner policy {planner!r}")
         self.graph = graph
@@ -221,6 +332,13 @@ class DenseRPQ:
         self._edge_s: Optional[np.ndarray] = None   # completed edges,
         self._edge_o: Optional[np.ndarray] = None   # label-major order
         self._edge_off: Optional[np.ndarray] = None
+        self._deadline: Optional[float] = None      # absolute, per eval call
+        self._superstep_acc = 0     # host-stepped/sharded superstep count
+        self.sharded = None
+        if mesh is not None or shards is not None:
+            from .distributed import ShardedDenseExec, resolve_mesh
+            rmesh, raxes = resolve_mesh(mesh, shards, data_axes, model_axis)
+            self.sharded = ShardedDenseExec(self.dg, rmesh, raxes, model_axis)
 
     @property
     def graph_stats(self) -> GraphStats:
@@ -324,6 +442,23 @@ class DenseRPQ:
             return np.zeros(V, dtype=bool)
         dg = self.dg
         max_steps = V * (g.m + 1) + 1
+        if self.sharded is not None:
+            B_host, PRED_host = plan.host_tables()
+            visited, it = self.sharded.run_rows(
+                B_host[None], PRED_host[None],
+                self._start_planes(g, objs)[None],
+                max_steps, deadline=self._deadline,
+                table_key=(plan, 1),
+            )
+            self._superstep_acc += it
+            return visited[0, :, 0] > 0
+        if self._deadline is not None:
+            visited, it = _host_stepped(
+                _bfs_chunk, (dg.subj, dg.pred, dg.obj, plan.B, plan.PRED),
+                self._start_planes(g, objs), V, max_steps, self._deadline,
+            )
+            self._superstep_acc += it
+            return np.asarray(visited[:, 0]) > 0
         visited, _ = _bfs(
             dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
             jnp.asarray(self._start_planes(g, objs)),
@@ -344,14 +479,40 @@ class DenseRPQ:
         Bsz = batch_size or self.source_batch
         S = g.m + 1
         frow = _start_row(g)
+        if self.sharded is not None:
+            B_host, PRED_host = plan.host_tables()
+            Bstk = np.broadcast_to(B_host, (Bsz,) + B_host.shape)
+            PREDstk = np.broadcast_to(PRED_host, (Bsz,) + PRED_host.shape)
         for i in range(0, len(starts), Bsz):
             chunk = np.asarray(starts[i : i + Bsz], dtype=np.int64)
+            if self.sharded is not None:
+                # pad the tail chunk so the compiled sharded step is
+                # reused across batches; zero rows converge immediately.
+                # table_key: the device tables are identical per (plan,
+                # Bsz), so chunks after the first skip the transfer
+                planes = np.zeros((Bsz, V, S), dtype=np.int8)
+                planes[np.arange(len(chunk)), chunk] = frow
+                visited, it = self.sharded.run_rows(
+                    Bstk, PREDstk, planes, V * S + 1,
+                    deadline=self._deadline, table_key=(plan, Bsz),
+                )
+                self._superstep_acc += it
+                hits[i : i + len(chunk)] = visited[: len(chunk), :, 0] > 0
+                continue
             planes = np.zeros((len(chunk), V, S), dtype=np.int8)
             planes[np.arange(len(chunk)), chunk] = frow
-            visited = _bfs_batched(
-                dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
-                jnp.asarray(planes), V, V * S + 1,
-            )
+            if self._deadline is not None:
+                visited, it = _host_stepped(
+                    _bfs_chunk_batched,
+                    (dg.subj, dg.pred, dg.obj, plan.B, plan.PRED),
+                    planes, V, V * S + 1, self._deadline,
+                )
+                self._superstep_acc += it
+            else:
+                visited = _bfs_batched(
+                    dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
+                    jnp.asarray(planes), V, V * S + 1,
+                )
             hits[i : i + len(chunk)] = np.asarray(visited[:, :, 0]) > 0
         return hits
 
@@ -403,11 +564,26 @@ class DenseRPQ:
                     Bstk[r, :, :S] = B_host
                     PREDstk[r, :S, :S] = PRED_host
                     planes[r, start, :S] = _start_row(plan.g)
-                visited = _bfs_hetero(
-                    dg.subj, dg.pred, dg.obj, jnp.asarray(Bstk),
-                    jnp.asarray(PREDstk), jnp.asarray(planes),
-                    V, V * S_pad + 1,
-                )
+                if self.sharded is not None:
+                    visited, it = self.sharded.run_rows(
+                        Bstk, PREDstk, planes, V * S_pad + 1,
+                        deadline=self._deadline,
+                    )
+                    self._superstep_acc += it
+                elif self._deadline is not None:
+                    visited, it = _host_stepped(
+                        _bfs_chunk_hetero,
+                        (dg.subj, dg.pred, dg.obj, jnp.asarray(Bstk),
+                         jnp.asarray(PREDstk)),
+                        planes, V, V * S_pad + 1, self._deadline,
+                    )
+                    self._superstep_acc += it
+                else:
+                    visited = _bfs_hetero(
+                        dg.subj, dg.pred, dg.obj, jnp.asarray(Bstk),
+                        jnp.asarray(PREDstk), jnp.asarray(planes),
+                        V, V * S_pad + 1,
+                    )
                 self.hetero_dispatches += 1
                 vis0 = np.asarray(visited[:R, :, 0]) > 0
                 for r, i in enumerate(chunk):
@@ -449,10 +625,12 @@ class DenseRPQ:
                                 reverse=True)
 
     def _split_unanchored(self, plan: qp.Plan,
-                          stats: Optional[QueryStats],
-                          limit: Optional[int] = None) -> Set[Tuple[int, int]]:
+                          stats: Optional[QueryStats]) -> Set[Tuple[int, int]]:
         """(x, E=A/p/B, y): per-endpoint batched half-BFS rows joined
-        through the seed edges (answer pairs need the SAME edge)."""
+        through the seed edges (answer pairs need the SAME edge).  The
+        join always completes — ``limit`` truncation is deterministic
+        (the sorted prefix), so a partial join could return the wrong
+        pairs."""
         sp = plan.split
         sarr, oarr = self._pred_edges(plan.split_pred)
         if stats is not None:
@@ -466,8 +644,6 @@ class DenseRPQ:
             for a in lmap[u]:
                 for b in rmap[v]:
                     out.add((a, b))
-            if limit is not None and len(out) >= limit:
-                return out
         return out
 
     def eval(
@@ -477,18 +653,35 @@ class DenseRPQ:
         obj: Optional[int] = None,
         limit: Optional[int] = None,
         stats: Optional[QueryStats] = None,
+        deadline_s: Optional[float] = None,
     ) -> Set[Tuple[int, int]]:
+        """Evaluate the 2RPQ (subject, expr, obj); ``None`` = variable.
+
+        ``deadline_s``: per-query timeout — raises ``TimeoutError`` (the
+        same signal :meth:`RingRPQ.eval` uses), checked between BFS
+        supersteps."""
+        import time as _time
+        prev_deadline = self._deadline
+        if deadline_s:
+            self._deadline = _time.time() + deadline_s
+        try:
+            return self._eval_inner(expr, subject, obj, limit, stats)
+        finally:
+            self._deadline = prev_deadline
+
+    def _eval_inner(self, expr, subject, obj, limit, stats):
         ast = rx.parse(expr)
         V = self.graph.num_nodes
         null = rx.nullable(ast)
         out: Set[Tuple[int, int]] = set()
+        acc0 = self._superstep_acc
         plan = self._decide(ast, subject is not None, obj is not None, stats)
 
         if subject is None and obj is None:
             if null:
                 out.update((v, v) for v in range(V))
             if plan.mode == "split":
-                out.update(self._split_unanchored(plan, stats, limit=limit))
+                out.update(self._split_unanchored(plan, stats))
             elif plan.mode == "reverse":
                 # objects-first: phase 1 over ^E finds the objects, then
                 # one batched-BFS row per object completes its subjects
@@ -548,14 +741,14 @@ class DenseRPQ:
                     out.add((subject, obj))
         if stats is not None:
             stats.results = len(out)
-        if limit is not None and len(out) > limit:
-            out = set(sorted(out)[:limit])
-        return out
+            stats.supersteps += self._superstep_acc - acc0
+        return truncate_result(out, limit)
 
     def eval_many(
         self,
         queries: Sequence[QueryLike],
         batch_size: Optional[int] = None,
+        deadline_s: Optional[float] = None,
     ) -> List[Set[Tuple[int, int]]]:
         """Answer a batch of queries; results match per-query :meth:`eval`.
 
@@ -568,9 +761,25 @@ class DenseRPQ:
         dispatches instead of 64 of each.  Finished answers land in the
         cross-request :class:`ResultCache`; replayed requests (and
         duplicates within the batch) skip evaluation entirely.
+
+        ``deadline_s`` is a *batch-wide* budget, exactly like
+        :meth:`RingRPQ.eval_many`: the coalesced rows and the delegated
+        multi-stage queries share one absolute deadline, and exceeding
+        it raises ``TimeoutError`` for the whole batch.
         """
+        import time as _time
         qs = [as_query(q) for q in queries]
         results: List[Optional[Set[Tuple[int, int]]]] = [None] * len(qs)
+        deadline = (_time.time() + deadline_s) if deadline_s else None
+        prev_deadline = self._deadline
+        self._deadline = deadline
+        try:
+            return self._eval_many_inner(qs, results, batch_size, deadline)
+        finally:
+            self._deadline = prev_deadline
+
+    def _eval_many_inner(self, qs, results, batch_size, deadline):
+        import time as _time
         pending = probe_result_cache(self.results, qs, results)
 
         rows: List[Tuple[_DensePlan, int]] = []
@@ -584,8 +793,12 @@ class DenseRPQ:
                     or qplan.mode == "split":
                 # multi-stage plans can't ride the single-BFS batch; the
                 # result stays keyed on the ORIGINAL normalized AST +
-                # endpoints, never the rewritten plan's expression
-                res = self.eval(q.expr, q.subject, q.obj, limit=q.limit)
+                # endpoints, never the rewritten plan's expression.
+                # They still draw on the shared batch deadline.
+                if deadline is not None and _time.time() > deadline:
+                    raise TimeoutError("query deadline exceeded")
+                res = self._eval_inner(q.expr, q.subject, q.obj, q.limit,
+                                       None)
                 publish_result(self.results, key, res, idxs, results)
             elif q.obj is not None and q.subject is not None \
                     and qplan.mode == "reverse":
@@ -626,7 +839,6 @@ class DenseRPQ:
                     else hits[bi][q.subject]
                 if (null and q.subject == q.obj) or hit:
                     out.add((q.subject, q.obj))
-            if q.limit is not None and len(out) > q.limit:
-                out = set(sorted(out)[: q.limit])
+            out = truncate_result(out, q.limit)
             publish_result(self.results, key, out, idxs, results)
         return results

@@ -112,6 +112,23 @@ class QueryStats:
     plan_actual_frontier: int = 0
 
 
+def truncate_result(out: Sequence[Tuple[int, int]],
+                    limit: Optional[int]) -> Set:
+    """Deterministic ``limit`` truncation: the ``limit`` smallest answers
+    in sorted (lexicographic) order.
+
+    This is THE definition of a limited answer set, shared by every
+    path — ring and dense engines, sharded and single-device execution,
+    and :class:`ResultCache` replays — so a ``limit=k`` query returns
+    the same pairs on every engine and on every run, and a cached
+    superset entry can serve a smaller-limit probe by re-truncation
+    (``sorted(full)[:j] == sorted(sorted(full)[:k])[:j]`` for j <= k).
+    """
+    if limit is None or len(out) <= limit:
+        return set(out)
+    return set(sorted(out)[:limit])
+
+
 _MISSING = object()
 
 
@@ -184,32 +201,93 @@ class ResultCache:
         self.ttl_s = ttl_s
         self.clock = clock
         self._entries: Dict[Any, Tuple[frozenset, float]] = {}
+        self._limited = 0  # entries whose result_key carries a limit
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.expirations = 0
 
-    def get(self, key: Any) -> Optional[frozenset]:
+    @staticmethod
+    def _is_limited(key: Any) -> bool:
+        return isinstance(key, tuple) and len(key) == 4 and key[3] is not None
+
+    def _lookup(self, key: Any) -> Optional[frozenset]:
+        """TTL-checked fetch with LRU recency refresh; no hit/miss
+        accounting (callers count exactly one hit or miss per probe)."""
         entry = self._entries.pop(key, None)
         if entry is None:
-            self.misses += 1
             return None
         value, stamp = entry
         if self.ttl_s is not None and self.clock() - stamp > self.ttl_s:
             self.expirations += 1
-            self.misses += 1
+            if self._is_limited(key):
+                self._limited -= 1
             return None
         self._entries[key] = entry  # LRU recency refresh
+        return value
+
+    def get(self, key: Any) -> Optional[frozenset]:
+        value = self._lookup(key)
+        if value is None:
+            self.misses += 1
+            return None
         self.hits += 1
         return value
 
+    def get_covering(self, key: Any) -> Optional[frozenset]:
+        """Exact entry, else a *superset* entry that can answer a limited
+        probe: for a :func:`result_key` ``(ast, subject, obj, limit=k)``
+        miss, an unlimited entry — or any entry with limit >= k — for
+        the same (ast, endpoints) is deterministically re-truncated
+        (see :func:`truncate_result`) and counted as a hit.  The
+        truncated answer is memoized under the probe key (inheriting the
+        source entry's TTL stamp), so a hot limited probe pays the
+        superset search once, not per request."""
+        value = self._lookup(key)
+        if value is not None:
+            self.hits += 1
+            return value
+        limit = key[3] if isinstance(key, tuple) and len(key) == 4 else None
+        if limit is not None:
+            src = key[:3] + (None,)
+            value = self._lookup(src)
+            if value is None and self._limited > 0:
+                # any larger-limit entry is a sorted prefix superset;
+                # scan MRU-first (bounded by the cache size, and skipped
+                # entirely when no limited entries are cached — the
+                # common serving case)
+                for k2 in reversed(list(self._entries.keys())):
+                    if isinstance(k2, tuple) and len(k2) == 4 \
+                            and k2[:3] == key[:3] \
+                            and k2[3] is not None and k2[3] >= limit:
+                        value = self._lookup(k2)
+                        if value is not None:
+                            src = k2
+                            break
+            if value is not None:
+                self.hits += 1
+                trunc = frozenset(truncate_result(value, limit))
+                entry = self._entries.get(src)
+                if entry is not None:       # inherit the source's stamp
+                    self._insert(key, trunc, entry[1])
+                return trunc
+        self.misses += 1
+        return None
+
     def put(self, key: Any, value: Set[Tuple[int, int]]) -> None:
+        self._insert(key, frozenset(value), self.clock())
+
+    def _insert(self, key: Any, value: frozenset, stamp: float) -> None:
         if self.max_entries <= 0:
             return
-        self._entries.pop(key, None)
-        self._entries[key] = (frozenset(value), self.clock())
+        if self._entries.pop(key, None) is None and self._is_limited(key):
+            self._limited += 1
+        self._entries[key] = (value, stamp)
         while len(self._entries) > self.max_entries:
-            self._entries.pop(next(iter(self._entries)))
+            evicted = next(iter(self._entries))
+            self._entries.pop(evicted)
+            if self._is_limited(evicted):
+                self._limited -= 1
             self.evictions += 1
 
     def __len__(self) -> int:
@@ -217,6 +295,7 @@ class ResultCache:
 
     def clear(self) -> None:
         self._entries.clear()
+        self._limited = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -245,7 +324,7 @@ def probe_result_cache(
     pending: Dict[Tuple, List[int]] = {}
     for idx, q in enumerate(queries):
         key = result_key(q)
-        cached = cache.get(key)
+        cached = cache.get_covering(key)
         if cached is not None:
             results[idx] = set(cached)
             if on_hit is not None:
@@ -310,6 +389,15 @@ def make_engine(graph, kind: str = "ring", **kwargs):
     """Build an RPQ engine over a :class:`LabeledGraph`.
 
     ``kind``: "ring" (succinct, paper-faithful) or "dense" (TPU planes).
+
+    Sharding knobs (both engines, forwarded to the constructors):
+    ``mesh=`` a :class:`jax.sharding.Mesh`, or ``shards=N`` for a 1-D
+    ``("data",)`` mesh over the first N local devices; ``data_axes=``
+    names the mesh axes the wavefront is partitioned over (default: all
+    axes, minus ``model_axis=`` on the dense engine, whose edges can
+    additionally be split over a model axis).  Sharded results are
+    identical to single-device ``eval`` — the mesh only changes where
+    the supersteps run (see :mod:`repro.core.distributed`).
     """
     if kind == "ring":
         from .ring import Ring

@@ -74,7 +74,7 @@ from . import planner as qp
 from . import regex as rx
 from .engines import (PlanBundle, PlanCache, QueryLike, QueryStats,
                       ResultCache, as_query, normalized_key,
-                      probe_result_cache, publish_result)
+                      probe_result_cache, publish_result, truncate_result)
 from .glushkov import Glushkov
 from .ring import Ring
 from .stats import GraphStats
@@ -100,13 +100,18 @@ class _Job:
     ``start_obj`` seeds one object; ``start_objs`` seeds several with a
     shared visited mask (union semantics — a split plan's half-traversal
     from all surviving seed endpoints); both ``None`` = the full range.
+
+    There is deliberately no ``limit`` early exit: a limited answer is
+    the *sorted prefix* of the full set (:func:`truncate_result`), and
+    the first k subjects in traversal order are not the k smallest —
+    stopping early would make limited answers disagree across engines.
+    Only the exact ``target`` membership exit remains.
     """
 
     plan: _RingPlan
     start_obj: Optional[int]
     stats: QueryStats
     target: Optional[int] = None
-    limit: Optional[int] = None
     start_objs: Optional[Sequence[int]] = None
     offset: int = 0                     # block-diagonal bit offset
     done: bool = False
@@ -134,6 +139,16 @@ class RingRPQ:
     as the parity reference.  ``stats``: injectable
     :class:`~repro.core.stats.GraphStats` (e.g. restored from a
     checkpoint); harvested from the ring on first use otherwise.
+
+    Sharding: ``mesh=`` (a :class:`jax.sharding.Mesh`) or ``shards=N``
+    range-splits every superstep's merged task list over the mesh's data
+    axes — each shard steps its slice through ``kernels/nfa_step``
+    locally and the result masks merge with an all-gather (see
+    :func:`repro.core.distributed.make_task_shard_step`).  Traversal
+    order, results, and work counters are unchanged: only where the
+    bit-parallel transition executes moves.  With a mesh set the auto
+    kernel threshold becomes finite on every backend (sharding is an
+    explicit opt-in), so wavefronts of >= 64 tasks dispatch sharded.
     """
 
     def __init__(self, ring: Ring, paper_dv: bool = False,
@@ -141,7 +156,9 @@ class RingRPQ:
                  kernel_threshold: Optional[int] = None,
                  result_cache: Optional[ResultCache] = None,
                  planner: str = "cost",
-                 stats: Optional[GraphStats] = None):
+                 stats: Optional[GraphStats] = None,
+                 mesh=None, shards: Optional[int] = None,
+                 data_axes=None):
         if planner not in ("cost", "naive", "forward", "reverse", "split"):
             raise ValueError(f"unknown planner policy {planner!r}")
         self.ring = ring
@@ -153,10 +170,21 @@ class RingRPQ:
         self.decisions = PlanCache()
         self.results = result_cache if result_cache is not None else ResultCache()
         self.bundle_kernel_batches = 0   # multi-plan nfa_step dispatches
+        self.sharded_kernel_batches = 0  # mesh-sharded nfa_step dispatches
         self._auto_threshold: Optional[float] = None
         self._stats = stats
         self._edge_s: Optional[np.ndarray] = None   # completed triples,
         self._edge_o: Optional[np.ndarray] = None   # predicate-major order
+        self.mesh = None
+        self.data_axes: tuple = ()
+        self._task_step = None           # compiled sharded transition
+        self._bwd_dev: Dict[int, tuple] = {}  # id(table) -> (host, device)
+        if mesh is not None or shards is not None:
+            from .distributed import resolve_mesh
+            self.mesh, self.data_axes = resolve_mesh(mesh, shards, data_axes)
+            self._num_shards = 1
+            for a in self.data_axes:
+                self._num_shards *= int(self.mesh.shape[a])
 
     @property
     def graph_stats(self) -> GraphStats:
@@ -252,8 +280,7 @@ class RingRPQ:
                 if null and q.subject == q.obj:
                     res = {(q.subject, q.obj)}
                     stats.results = len(res)
-                    if q.limit is not None and len(res) > q.limit:
-                        res = set(list(res)[: q.limit])
+                    res = truncate_result(res, q.limit)
                     publish_result(self.results, key, res, idxs, results)
                     continue
                 if qplan.mode == "reverse":
@@ -272,10 +299,10 @@ class RingRPQ:
                            target=tgt)
             elif q.obj is not None:                       # (x, E, o)
                 job = _Job(plan=self._plan(ast), start_obj=q.obj,
-                           stats=stats, limit=q.limit)
+                           stats=stats)
             else:                                         # (s, E, y)
                 job = _Job(plan=self._plan(rx.reverse(ast)),
-                           start_obj=q.subject, stats=stats, limit=q.limit)
+                           start_obj=q.subject, stats=stats)
             stats.plan_actual_frontier = 1
             jobs.append((key, q, ast, job))
 
@@ -297,8 +324,7 @@ class RingRPQ:
                     out.add((q.subject, q.subject))
                 out.update((q.subject, o) for o in job.reported)
             job.stats.results = len(out)
-            if q.limit is not None and len(out) > q.limit:
-                out = set(list(out)[: q.limit])
+            out = truncate_result(out, q.limit)
             publish_result(self.results, key, out, pending[key], results)
 
         if stats_out is not None:
@@ -323,9 +349,9 @@ class RingRPQ:
             if null:
                 out.update((v, v) for v in range(V))
             if plan.mode == "split":
-                out.update(self._split_unanchored(plan, stats, limit=limit))
+                out.update(self._split_unanchored(plan, stats))
             elif plan.mode == "reverse":
-                out.update(self._unanchored_reverse(ast, stats, limit=limit))
+                out.update(self._unanchored_reverse(ast, stats))
             else:
                 # phase 1: from the full L_p range, find subjects reaching
                 # *some* object...
@@ -341,20 +367,22 @@ class RingRPQ:
                         p_fwd, start_obj=s, stats=stats
                     )
                     out.update((s, o) for o in objs)
-                    if limit is not None and len(out) >= limit:
-                        return set(list(out)[:limit])
+                    # exact early exit for the sorted-prefix limit rule:
+                    # sources ascend and (non-null) every pair collected
+                    # so far has first component <= s, so all remaining
+                    # pairs sort strictly after the k we already hold
+                    if limit is not None and not null and len(out) >= limit:
+                        break
         elif subject is None:
             # (x, E, o): backward from o
             if null:
                 out.add((obj, obj))
             if plan.mode == "split":
                 out.update((s, obj) for s in
-                           self._split_from_obj(plan, obj, stats,
-                                                limit=limit))
+                           self._split_from_obj(plan, obj, stats))
             else:
                 p_bwd = self._plan(ast)
-                srcs = self._traverse(p_bwd, start_obj=obj, stats=stats,
-                                      limit=limit)
+                srcs = self._traverse(p_bwd, start_obj=obj, stats=stats)
                 stats.plan_actual_frontier = 1
                 out.update((s, obj) for s in srcs)
         elif obj is None:
@@ -363,12 +391,10 @@ class RingRPQ:
                 out.add((subject, subject))
             if plan.mode == "split":
                 out.update((subject, o) for o in
-                           self._split_from_subj(plan, subject, stats,
-                                                 limit=limit))
+                           self._split_from_subj(plan, subject, stats))
             else:
                 p_fwd = self._plan(rx.reverse(ast))
-                objs = self._traverse(p_fwd, start_obj=subject, stats=stats,
-                                      limit=limit)
+                objs = self._traverse(p_fwd, start_obj=subject, stats=stats)
                 stats.plan_actual_frontier = 1
                 out.update((subject, o) for o in objs)
         else:
@@ -399,9 +425,7 @@ class RingRPQ:
                 if tgt in found:
                     out.add((subject, obj))
         stats.results = len(out)
-        if limit is not None and len(out) > limit:
-            out = set(list(out)[:limit])
-        return out
+        return truncate_result(out, limit)
 
     # -- internals -------------------------------------------------------------
     def _start_cost(self, g: Glushkov) -> int:
@@ -456,32 +480,31 @@ class RingRPQ:
 
     def _half_union(self, side_ast, seeds, stats: QueryStats,
                     reverse: bool = False,
-                    target: Optional[int] = None,
-                    limit: Optional[int] = None) -> Set[int]:
+                    target: Optional[int] = None) -> Set[int]:
         """Union half-traversal of a split plan: nodes related to *some*
         seed through ``side_ast`` (reversed for the subject-side half),
         including the seeds themselves when the half matches the empty
         word.  One multi-seed job — shared visited masks, since only the
-        union matters.  ``limit`` stops the traversal once that many
-        nodes are reported (only for the half that produces answers)."""
+        union matters.  Always runs to completion: a limited answer is
+        the sorted prefix of the full set (:func:`truncate_result`), so
+        stopping at the first k reported nodes would be wrong."""
         seeds = [int(x) for x in seeds]
         if side_ast is None:
             return set(seeds)
         ast = rx.reverse(side_ast) if reverse else side_ast
         job = _Job(plan=self._plan(ast), start_obj=None, stats=stats,
-                   target=target, limit=limit, start_objs=seeds)
+                   target=target, start_objs=seeds)
         self._traverse_many([job], deadline=getattr(self, "_deadline", None))
         out = set(job.reported)
         if rx.nullable(side_ast):
             out.update(seeds)
         return out
 
-    def _split_from_obj(self, plan: qp.Plan, obj: int, stats: QueryStats,
-                        limit: Optional[int] = None) -> Set[int]:
+    def _split_from_obj(self, plan: qp.Plan, obj: int,
+                        stats: QueryStats) -> Set[int]:
         """(x, E=A/p/B, o): subjects s with s -A-> sp -p-> op -B-> o.
         Right half from o confines the seed edges; left half is one
-        union traversal from the surviving subjects of p (it produces
-        the answers, so it honors ``limit``)."""
+        union traversal from the surviving subjects of p."""
         sp = plan.split
         sarr, oarr = self._pred_edges(plan.split_pred)
         if sarr.size == 0:
@@ -493,11 +516,10 @@ class RingRPQ:
         seeds = np.unique(sarr[keep])
         if seeds.size == 0:
             return set()
-        return self._half_union(sp.left, seeds, stats, limit=limit)
+        return self._half_union(sp.left, seeds, stats)
 
     def _split_from_subj(self, plan: qp.Plan, subject: int,
-                         stats: QueryStats,
-                         limit: Optional[int] = None) -> Set[int]:
+                         stats: QueryStats) -> Set[int]:
         """(s, E=A/p/B, y): objects o with s -A-> sp -p-> op -B-> o."""
         sp = plan.split
         sarr, oarr = self._pred_edges(plan.split_pred)
@@ -510,8 +532,7 @@ class RingRPQ:
         ops = np.unique(oarr[keep])
         if ops.size == 0:
             return set()
-        return self._half_union(sp.right, ops, stats, reverse=True,
-                                limit=limit)
+        return self._half_union(sp.right, ops, stats, reverse=True)
 
     def _split_both(self, plan: qp.Plan, subject: int, obj: int,
                     stats: QueryStats) -> bool:
@@ -530,8 +551,8 @@ class RingRPQ:
         return subject in self._half_union(sp.left, seeds, stats,
                                            target=subject)
 
-    def _split_unanchored(self, plan: qp.Plan, stats: QueryStats,
-                          limit: Optional[int] = None) -> Set[Tuple[int, int]]:
+    def _split_unanchored(self, plan: qp.Plan,
+                          stats: QueryStats) -> Set[Tuple[int, int]]:
         """(x, E=A/p/B, y): meet in the middle at p's edge occurrences.
         Per-endpoint half-traversals (one lockstep wavefront for ALL of
         them, left and right plans bundled block-diagonally) joined
@@ -587,12 +608,10 @@ class RingRPQ:
             for a in L:
                 for b in R:
                     out.add((a, b))
-            if limit is not None and len(out) >= limit:
-                return out
         return out
 
-    def _unanchored_reverse(self, ast, stats: QueryStats,
-                            limit: Optional[int] = None) -> Set[Tuple[int, int]]:
+    def _unanchored_reverse(self, ast,
+                            stats: QueryStats) -> Set[Tuple[int, int]]:
         """(x, E, y) objects-first: phase 1 enumerates the objects (the
         subjects of ^E), phase 2 completes every object from its own side
         — batched as one multi-job wavefront instead of a per-source
@@ -608,8 +627,6 @@ class RingRPQ:
         out: Set[Tuple[int, int]] = set()
         for o, job in zip(objs, jobs):
             out.update((s, o) for s in job.reported)
-            if limit is not None and len(out) >= limit:
-                break
         return out
 
     def _build_Bv(self, g: Glushkov) -> Dict[Tuple[int, int], int]:
@@ -631,6 +648,11 @@ class RingRPQ:
         if self.kernel_threshold is not None:
             return self.kernel_threshold
         if self._auto_threshold is None:
+            if self.mesh is not None:
+                # sharding is an explicit opt-in: dispatch real wavefronts
+                # through the mesh on any backend
+                self._auto_threshold = 64.0
+                return self._auto_threshold
             try:
                 import jax
                 on_tpu = jax.default_backend() == "tpu"
@@ -640,6 +662,36 @@ class RingRPQ:
             # tables at any size; on TPU the kernel pays off quickly
             self._auto_threshold = 64.0 if on_tpu else float("inf")
         return self._auto_threshold
+
+    def _nfa_step_batch(self, X: np.ndarray, bwd) -> np.ndarray:
+        """Dispatch one packed task batch through ``kernels/nfa_step`` —
+        on the mesh when sharding is on (range-split over the data axes,
+        pow2-padded so compiled shapes are reused), else single-device."""
+        from ..kernels import ops
+        if self.mesh is None:
+            return np.asarray(ops.nfa_step(X, bwd))
+        if self._task_step is None:
+            from .distributed import make_task_shard_step
+            self._task_step = make_task_shard_step(self.mesh, self.data_axes)
+        import jax.numpy as jnp
+        # the packed table is identical across a traversal's supersteps
+        # (memoized per plan/bundle) — ship it to devices once, not per
+        # dispatch; key on id() while holding the host array alive
+        cached = self._bwd_dev.get(id(bwd))
+        if cached is None:
+            cached = (bwd, jnp.asarray(bwd))
+            self._bwd_dev[id(bwd)] = cached
+            while len(self._bwd_dev) > 64:   # bundles churn per batch
+                self._bwd_dev.pop(next(iter(self._bwd_dev)))
+        n, N = self._num_shards, X.shape[0]
+        per = 1
+        while per * n < N:
+            per *= 2
+        Xp = np.zeros((per * n, X.shape[1]), dtype=np.uint32)
+        Xp[:N] = X
+        Y = np.asarray(self._task_step(Xp, cached[1]))
+        self.sharded_kernel_batches += 1
+        return Y[:N]
 
     def _bundle(self, jobs: List[_Job]) -> PlanBundle:
         """Block-diagonal bundle over the distinct plans of ``jobs``; sets
@@ -672,7 +724,6 @@ class RingRPQ:
         masks = [t[3] for t in tasks]
         if len(masks) < self._resolve_threshold():
             return [t[0].plan.g.Tp(m) for t, m in zip(tasks, masks)]
-        from ..kernels import ops
         single_plan = all(t[0].plan is tasks[0][0].plan for t in tasks)
         if single_plan:
             g = tasks[0][0].plan.g
@@ -681,7 +732,7 @@ class RingRPQ:
             for i, m in enumerate(masks):
                 for w in range(W):
                     X[i, w] = (m >> (32 * w)) & 0xFFFFFFFF
-            Y = np.asarray(ops.nfa_step(X, g.packed_bwd()))
+            Y = self._nfa_step_batch(X, g.packed_bwd())
             shifts = None
         else:
             if "packed_bwd" not in bundle.extras:
@@ -696,7 +747,7 @@ class RingRPQ:
                 lifted = m << off
                 for w in range(W):
                     X[i, w] = (lifted >> (32 * w)) & 0xFFFFFFFF
-            Y = np.asarray(ops.nfa_step(X, bundle.extras["packed_bwd"]))
+            Y = self._nfa_step_batch(X, bundle.extras["packed_bwd"])
             self.bundle_kernel_batches += 1
         counted = set()
         for t in tasks:
@@ -722,14 +773,13 @@ class RingRPQ:
         start_obj: Optional[int],
         stats: QueryStats,
         target: Optional[int] = None,
-        limit: Optional[int] = None,
     ) -> Set[int]:
         """Backward wavefront BFS (Secs. 4.1–4.3).  ``start_obj=None``
         starts from the full L_p range (Sec. 4.4).  Returns reported
         subjects.  One-job wrapper over :meth:`_traverse_many` — the
         multi-job stream with a single job is step-for-step identical."""
         job = _Job(plan=plan, start_obj=start_obj, stats=stats,
-                   target=target, limit=limit)
+                   target=target)
         self._traverse_many([job], deadline=getattr(self, "_deadline", None))
         return job.reported
 
@@ -746,8 +796,8 @@ class RingRPQ:
         and with it ``kernel_batches``/``kernel_tasks``, is decided on
         the merged batch, not per job).
 
-        A job that hits its ``target`` or ``limit`` is marked done and
-        contributes nothing further (the solo equivalent of returning
+        A job that hits its ``target`` is marked done and contributes
+        nothing further (the solo equivalent of returning
         mid-superstep)."""
         ring = self.ring
         wt_p, wt_s = ring.wt_p, ring.wt_s
@@ -853,9 +903,7 @@ class RingRPQ:
                     stats.node_state_activations += bin(Dnew).count("1")
                     if Dnew & INIT:
                         job.reported.add(s)
-                        if (job.target is not None and s == job.target) or \
-                                (job.limit is not None and
-                                 len(job.reported) >= job.limit):
+                        if job.target is not None and s == job.target:
                             job.done = True
                             break
                     # ---- part 3: subject becomes the next object range ----
