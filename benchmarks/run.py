@@ -55,6 +55,8 @@ SUITES = {
                                         fromlist=["run"]).run(),
     "sharded": lambda: __import__("benchmarks.sharded",
                                   fromlist=["run"]).run(),
+    "updates": lambda: __import__("benchmarks.updates",
+                                  fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -1,0 +1,128 @@
+"""Live-update subsystem: ingest throughput, query latency vs overlay
+size, and compaction cost.
+
+    PYTHONPATH=src python -m benchmarks.updates [--smoke]
+
+Rows (dense engine — the serving path; the ring engine reads the same
+overlay structures):
+
+    updates/ingest/us_per_edge            add_edges throughput, including
+                                          footprint cache invalidation and
+                                          incremental stats refresh
+    updates/query/overlay{N}/us_per_query eval_many latency of a mixed
+                                          16-query batch at overlay size N
+                                          (N=0 is the pristine baseline)
+    updates/query/overlay{N}/slowdown_vs_0   the overlay tax
+    updates/compaction/us                 folding the overlay back into a
+                                          fresh base (graph + planes +
+                                          stats + sharded re-partition)
+    updates/invalidation/us_per_mutation  footprint-precise cache expiry
+                                          on a warm 512-entry result cache
+
+``--smoke`` / BENCH_SMOKE=1 shrinks the fixture for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+
+def _mixed_queries(g, n):
+    from repro.core.engines import Query
+    rng = np.random.default_rng(11)
+    exprs = ["0/1*", "(0|3)+", "^1/0*", "2", "(2|0)/1"]
+    return [Query(exprs[i % len(exprs)],
+                  obj=int(rng.integers(0, g.num_nodes)))
+            for i in range(n)]
+
+
+def run():
+    from repro.core.engines import make_engine
+    from repro.core.fixtures import scale_free_graph
+
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    V, P, E = (400, 6, 3_000) if smoke else (3_000, 8, 24_000)
+    step = 64 if smoke else 256          # edges per mutation batch
+    ladder = (1, 4) if smoke else (1, 4, 16)  # overlay sizes in steps
+    rows = []
+    rng = np.random.default_rng(5)
+    g = scale_free_graph(V, P, E, seed=23)
+    eng = make_engine(g, "dense", compact_threshold=None)
+    queries = _mixed_queries(g, 16)
+
+    # warm-up: compile the BFS shapes and harvest stats
+    eng.eval_many(queries)
+    eng.results.clear()
+
+    def batch(n):
+        return [(int(s), int(p), int(o)) for s, p, o in
+                zip(rng.integers(0, V, n), rng.integers(0, P, n),
+                    rng.integers(0, V, n))]
+
+    # baseline query latency at overlay size 0
+    t0 = time.time()
+    eng.eval_many(queries)
+    base_q = (time.time() - t0) / len(queries)
+    rows.append(("updates/query/overlay0/us_per_query", base_q * 1e6))
+
+    # ingest throughput + latency ladder vs overlay size
+    total_edges = 0
+    t_ingest = 0.0
+    done = 0
+    for k in ladder:
+        while done < k:
+            edges = batch(step)
+            t0 = time.time()
+            eng.add_edges(edges)
+            t_ingest += time.time() - t0
+            total_edges += len(edges)
+            done += 1
+        # warm once (the effective edge arrays' padded length may have
+        # crossed a power of two -> new compiled BFS shapes), then time
+        # steady state; clear results so the timed run evaluates
+        eng.eval_many(queries)
+        eng.results.clear()
+        t0 = time.time()
+        eng.eval_many(queries)
+        per_q = (time.time() - t0) / len(queries)
+        n = eng.delta.size
+        rows.append((f"updates/query/overlay{k * step}/us_per_query",
+                     per_q * 1e6))
+        rows.append((f"updates/query/overlay{k * step}/slowdown_vs_0",
+                     per_q / max(base_q, 1e-9)))
+        rows.append((f"updates/query/overlay{k * step}/overlay_rows", n))
+    rows.append(("updates/ingest/us_per_edge",
+                 t_ingest / max(total_edges, 1) * 1e6))
+
+    # footprint-precise invalidation cost on a warm result cache
+    warm = _mixed_queries(g, 64 if smoke else 512)
+    eng.eval_many(warm)
+    t0 = time.time()
+    reps = 8
+    for _ in range(reps):
+        eng.add_edges(batch(4))
+    rows.append(("updates/invalidation/us_per_mutation",
+                 (time.time() - t0) / reps * 1e6))
+
+    # compaction: fold the overlay back into a fresh base
+    overlay_rows = eng.delta.size
+    t0 = time.time()
+    eng.compact()
+    dt = time.time() - t0
+    rows.append(("updates/compaction/us", dt * 1e6))
+    rows.append(("updates/compaction/overlay_rows_folded", overlay_rows))
+    # post-compaction sanity: back to the (near-)baseline query path
+    eng.eval_many(queries)       # recompile for the compacted shapes
+    eng.results.clear()
+    t0 = time.time()
+    eng.eval_many(queries)
+    rows.append(("updates/query/post_compaction/us_per_query",
+                 (time.time() - t0) / len(queries) * 1e6))
+    return rows
+
+
+if __name__ == "__main__":
+    for key, val in run():
+        print(f"{key},{val}")

@@ -1,4 +1,5 @@
 """The paper's contribution: ring index + Glushkov bit-parallel RPQs."""
+from .delta import DeltaOverlay
 from .engines import PlanCache, Query, eval_many, make_engine
 from .glushkov import Glushkov
 from .regex import parse, reverse, nullable

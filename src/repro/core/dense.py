@@ -38,6 +38,15 @@ vmapped BFS (``_bfs_hetero``) runs every plan at once.  Padding states
 have empty B columns and zero PRED rows, so they can never activate —
 per-row results are bit-identical to a solo run.
 
+Live updates (:mod:`repro.core.delta`): the masked-plane path.  Plane
+tables carry one extra all-zero *inert* label row; a mutation relabels
+tombstoned base edges to it (they can never fire) and appends the
+overlay's insert buffer as extra edge rows (pow2-padded so compiled BFS
+shapes are reused while the buffer grows) — every BFS shape then runs
+the effective edge set unchanged, and sharded engines re-partition the
+same arrays (``ShardedDenseExec.refresh_edges``).  See
+``add_edges``/``remove_edges``/``compact``.
+
 Mesh sharding (``mesh=``/``shards=N``): the node axis of every one of
 these BFS shapes is range-partitioned over a device mesh's data axes and
 the supersteps run shard-local with one frontier all-gather per step
@@ -57,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import delta as dl
 from . import planner as qp
 from . import regex as rx
 from .engines import (PlanCache, QueryLike, QueryStats, ResultCache,
@@ -99,10 +109,14 @@ def _start_row(g: Glushkov) -> np.ndarray:
 
 
 def _plane_tables(g: Glushkov, num_labels: int):
-    """Bool-plane tables: B[labels, S], PRED[S, S], F[S], with state i on
-    column i (column 0 = initial)."""
+    """Bool-plane tables: B[labels + 1, S], PRED[S, S], F[S], with state
+    i on column i (column 0 = initial).  The extra label row
+    ``num_labels`` is all-zero — the *inert* label: tombstoned base
+    edges and padding edges are relabeled to it, so they match nothing
+    (the masked-plane half of the live-update path; the sharded edge
+    partition uses the same row for its padding edges)."""
     S = g.m + 1
-    B = np.zeros((num_labels, S), dtype=np.int8)
+    B = np.zeros((num_labels + 1, S), dtype=np.int8)
     for lab, mask in g.B.items():
         if 0 <= lab < num_labels:
             for i in range(S):
@@ -289,7 +303,7 @@ class _DensePlan:
         return self._host
 
 
-class DenseRPQ:
+class DenseRPQ(dl.LiveUpdateEngine):
     """Dense-engine 2RPQ evaluation with RingRPQ-identical semantics.
 
     ``planner``/``stats`` mirror :class:`~repro.core.rpq.RingRPQ`: the
@@ -317,7 +331,9 @@ class DenseRPQ:
                  planner: str = "cost",
                  stats: Optional[GraphStats] = None,
                  mesh=None, shards: Optional[int] = None,
-                 data_axes=None, model_axis: Optional[str] = None):
+                 data_axes=None, model_axis: Optional[str] = None,
+                 compact_threshold: Optional[int] =
+                 dl.DEFAULT_COMPACT_THRESHOLD):
         if planner not in ("cost", "naive", "forward", "reverse", "split"):
             raise ValueError(f"unknown planner policy {planner!r}")
         self.graph = graph
@@ -328,10 +344,15 @@ class DenseRPQ:
         self.decisions = PlanCache()
         self.results = result_cache if result_cache is not None else ResultCache()
         self.hetero_dispatches = 0   # _bfs_hetero device calls
+        self.delta: Optional[dl.DeltaOverlay] = None  # live-update overlay
+        self.compact_threshold = compact_threshold
+        self.compactions = 0
+        self._eff = None            # (subj, pred, obj) with overlay applied
         self._stats = stats
         self._edge_s: Optional[np.ndarray] = None   # completed edges,
         self._edge_o: Optional[np.ndarray] = None   # label-major order
         self._edge_off: Optional[np.ndarray] = None
+        self._edge_eff: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._deadline: Optional[float] = None      # absolute, per eval call
         self._superstep_acc = 0     # host-stepped/sharded superstep count
         self.sharded = None
@@ -342,10 +363,93 @@ class DenseRPQ:
 
     @property
     def graph_stats(self) -> GraphStats:
-        """Selectivity statistics for the planner (lazy; injectable)."""
+        """Selectivity statistics for the planner (lazy; injectable).
+        With a live overlay, a fresh harvest reads the static base, so
+        every predicate the overlay ever touched is refreshed from the
+        effective edges before first use."""
         if self._stats is None:
             self._stats = GraphStats.from_graph(self.graph)
+            self._refresh_touched_stats()
         return self._stats
+
+    # -- live updates (surface shared via delta.LiveUpdateEngine) ------------
+    def _base_graph(self) -> LabeledGraph:
+        return self.graph
+
+    def _overlay_created(self) -> None:
+        # base edge keys, aligned with dg's subject-sorted edge order
+        # — the tombstone mask is a per-mutation np.isin over these
+        self._base_keys = dl.pack_keys(
+            np.asarray(self.dg.subj), np.asarray(self.dg.pred),
+            np.asarray(self.dg.obj), self.graph.num_nodes,
+            self.dg.num_labels)
+
+    def _on_overlay_change(self, mutated_raw) -> None:
+        """Rebuild the effective edge arrays (the masked-plane path):
+        tombstoned base edges are relabeled to the inert label — their
+        B row is all-zero, so they can never fire — and the overlay's
+        insert buffer is appended as extra edge rows (padded to a power
+        of two so compiled BFS shapes are reused while the buffer
+        grows).  A mesh-sharded engine re-partitions the same arrays."""
+        ov = self.delta
+        self._edge_eff = {}
+        subj = np.asarray(self.dg.subj, dtype=np.int32)
+        pred = np.asarray(self.dg.pred, dtype=np.int32)
+        obj = np.asarray(self.dg.obj, dtype=np.int32)
+        L = self.dg.num_labels
+        if ov.has_tombs:
+            pred = np.where(np.isin(self._base_keys, ov.tombstoned_keys()),
+                            np.int32(L), pred)
+        ds, dp, do = ov.delta_edge_rows()
+        cap = 8
+        while cap < ds.size:
+            cap *= 2
+        if ds.size or ov.has_tombs:
+            pad_s = np.zeros(cap, dtype=np.int32)
+            pad_p = np.full(cap, L, dtype=np.int32)
+            pad_o = np.zeros(cap, dtype=np.int32)
+            pad_s[:ds.size] = ds
+            pad_p[:dp.size] = dp
+            pad_o[:do.size] = do
+            subj = np.concatenate([subj, pad_s])
+            pred = np.concatenate([pred, pad_p])
+            obj = np.concatenate([obj, pad_o])
+            self._eff = (jnp.asarray(subj), jnp.asarray(pred),
+                         jnp.asarray(obj))
+        else:
+            self._eff = None
+        if self.sharded is not None:
+            from types import SimpleNamespace
+            self.sharded.refresh_edges(SimpleNamespace(
+                subj=subj, pred=pred, obj=obj,
+                num_nodes=self.dg.num_nodes, num_labels=L))
+
+    def _edges(self):
+        """The (subj, pred, obj) device arrays every BFS runs over —
+        the effective set when an overlay is live, else the base."""
+        return self._eff if self._eff is not None \
+            else (self.dg.subj, self.dg.pred, self.dg.obj)
+
+    def compact(self) -> None:
+        """Fold the overlay into a fresh base graph + plane arrays.
+        Logical no-op: results, the epoch counter, and surviving cache
+        entries are unchanged — only the physical base moves."""
+        if self.delta is None or self.delta.size == 0:
+            return
+        self.graph = self.effective_graph()
+        self.dg = DenseGraph.from_graph(self.graph)
+        s, p, o = self.graph.completed_triples()
+        self.delta.reset_after_compaction(
+            dl.pack_keys(s, p, o, self.graph.num_nodes, self.dg.num_labels))
+        self._overlay_created()   # re-key the fresh base edge order
+        self._eff = None
+        self._edge_s = self._edge_o = self._edge_off = None
+        self._edge_eff = {}
+        if self._stats is not None:
+            self._stats = GraphStats.from_graph(self.graph)
+        if self.sharded is not None:
+            self.sharded.refresh_edges(self.dg)
+        self.compactions += 1
 
     def _resolve_lit(self, lit: rx.Lit) -> int:
         return self.graph.resolve_lit(lit)
@@ -373,12 +477,13 @@ class DenseRPQ:
                          policy=self.planner, decisions=self.decisions,
                          stats_provider=lambda: self.graph_stats,
                          resolve=self._resolve_lit, record=stats,
-                         unanchored_margin=qp.ANCHORED_MARGIN)
+                         unanchored_margin=qp.ANCHORED_MARGIN,
+                         footprint=self._footprint(ast))
 
     # -- split-plan primitives ---------------------------------------------
-    def _pred_edges(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
-        """(subjects, objects) of the completed edges labeled ``p`` — the
-        seed edges of a split plan, label-major order built on first use."""
+    def _pred_edges_base(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(subjects, objects) of the *base* completed edges labeled
+        ``p``, label-major order built on first use."""
         if self._edge_s is None:
             pred = np.asarray(self.dg.pred)
             order = np.argsort(pred, kind="stable")
@@ -440,7 +545,7 @@ class DenseRPQ:
         g = plan.g
         if g.F & ~1 == 0:
             return np.zeros(V, dtype=bool)
-        dg = self.dg
+        subj, pred, obj = self._edges()
         max_steps = V * (g.m + 1) + 1
         if self.sharded is not None:
             B_host, PRED_host = plan.host_tables()
@@ -454,13 +559,13 @@ class DenseRPQ:
             return visited[0, :, 0] > 0
         if self._deadline is not None:
             visited, it = _host_stepped(
-                _bfs_chunk, (dg.subj, dg.pred, dg.obj, plan.B, plan.PRED),
+                _bfs_chunk, (subj, pred, obj, plan.B, plan.PRED),
                 self._start_planes(g, objs), V, max_steps, self._deadline,
             )
             self._superstep_acc += it
             return np.asarray(visited[:, 0]) > 0
         visited, _ = _bfs(
-            dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
+            subj, pred, obj, plan.B, plan.PRED,
             jnp.asarray(self._start_planes(g, objs)),
             num_nodes=V, max_steps=max_steps,
         )
@@ -475,7 +580,7 @@ class DenseRPQ:
         hits = np.zeros((len(starts), V), dtype=bool)
         if g.F & ~1 == 0 or not len(starts):
             return hits
-        dg = self.dg
+        subj, pred, obj = self._edges()
         Bsz = batch_size or self.source_batch
         S = g.m + 1
         frow = _start_row(g)
@@ -504,13 +609,13 @@ class DenseRPQ:
             if self._deadline is not None:
                 visited, it = _host_stepped(
                     _bfs_chunk_batched,
-                    (dg.subj, dg.pred, dg.obj, plan.B, plan.PRED),
+                    (subj, pred, obj, plan.B, plan.PRED),
                     planes, V, V * S + 1, self._deadline,
                 )
                 self._superstep_acc += it
             else:
                 visited = _bfs_batched(
-                    dg.subj, dg.pred, dg.obj, plan.B, plan.PRED,
+                    subj, pred, obj, plan.B, plan.PRED,
                     jnp.asarray(planes), V, V * S + 1,
                 )
             hits[i : i + len(chunk)] = np.asarray(visited[:, :, 0]) > 0
@@ -542,8 +647,8 @@ class DenseRPQ:
         hits = np.zeros((len(rows), V), dtype=bool)
         if not rows:
             return hits
-        dg = self.dg
-        L = dg.num_labels
+        subj, pred, obj = self._edges()
+        L = self.dg.num_labels
         Bsz = batch_size or self.source_batch
         buckets: Dict[int, List[int]] = {}
         for i, (plan, _start) in enumerate(rows):
@@ -552,7 +657,9 @@ class DenseRPQ:
             for c0 in range(0, len(members), Bsz):
                 chunk = members[c0 : c0 + Bsz]
                 R = len(chunk)
-                Bstk = np.zeros((Bsz, L, S_pad), dtype=np.int8)
+                # L+1 label rows: the trailing inert row (see
+                # _plane_tables) stays all-zero in every stacked table
+                Bstk = np.zeros((Bsz, L + 1, S_pad), dtype=np.int8)
                 PREDstk = np.zeros((Bsz, S_pad, S_pad), dtype=np.int8)
                 planes = np.zeros((Bsz, V, S_pad), dtype=np.int8)
                 for r, i in enumerate(chunk):
@@ -573,14 +680,14 @@ class DenseRPQ:
                 elif self._deadline is not None:
                     visited, it = _host_stepped(
                         _bfs_chunk_hetero,
-                        (dg.subj, dg.pred, dg.obj, jnp.asarray(Bstk),
+                        (subj, pred, obj, jnp.asarray(Bstk),
                          jnp.asarray(PREDstk)),
                         planes, V, V * S_pad + 1, self._deadline,
                     )
                     self._superstep_acc += it
                 else:
                     visited = _bfs_hetero(
-                        dg.subj, dg.pred, dg.obj, jnp.asarray(Bstk),
+                        subj, pred, obj, jnp.asarray(Bstk),
                         jnp.asarray(PREDstk), jnp.asarray(planes),
                         V, V * S_pad + 1,
                     )
@@ -742,6 +849,9 @@ class DenseRPQ:
         if stats is not None:
             stats.results = len(out)
             stats.supersteps += self._superstep_acc - acc0
+            stats.epoch = self.epoch
+            stats.result_cache_invalidations = self.results.invalidations
+            stats.plan_cache_invalidations = self.decisions.invalidations
         return truncate_result(out, limit)
 
     def eval_many(
@@ -780,6 +890,7 @@ class DenseRPQ:
 
     def _eval_many_inner(self, qs, results, batch_size, deadline):
         import time as _time
+        epoch = self.epoch
         pending = probe_result_cache(self.results, qs, results)
 
         rows: List[Tuple[_DensePlan, int]] = []
@@ -799,7 +910,8 @@ class DenseRPQ:
                     raise TimeoutError("query deadline exceeded")
                 res = self._eval_inner(q.expr, q.subject, q.obj, q.limit,
                                        None)
-                publish_result(self.results, key, res, idxs, results)
+                publish_result(self.results, key, res, idxs, results,
+                               footprint=self._footprint(ast), epoch=epoch)
             elif q.obj is not None and q.subject is not None \
                     and qplan.mode == "reverse":
                 # (s,E,o) from the subject side over ^E
@@ -840,5 +952,6 @@ class DenseRPQ:
                 if (null and q.subject == q.obj) or hit:
                     out.add((q.subject, q.obj))
             out = truncate_result(out, q.limit)
-            publish_result(self.results, key, out, idxs, results)
+            publish_result(self.results, key, out, idxs, results,
+                           footprint=self._footprint(ast), epoch=epoch)
         return results

@@ -308,23 +308,36 @@ class ShardedDenseExec:
         self.data_axes = tuple(data_axes)
         self.model_axis = model_axis
         self.num_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
-        pad = int(mesh.shape[model_axis]) if model_axis else 1
-        self.sg = ShardedGraph.from_dense(dg, self.num_shards,
-                                          pad_multiple=pad)
+        self._pad_multiple = int(mesh.shape[model_axis]) if model_axis else 1
         self.num_nodes = dg.num_nodes
         self.num_labels = dg.num_labels
         self.dispatches = 0      # sharded superstep-loop launches
         self.supersteps = 0      # total supersteps across all launches
+        self.edge_refreshes = 0  # live-update edge re-partitions
         self._table_cache: dict = {}  # table_key -> (B_dev, PRED_dev)
-        spec_edges = NamedSharding(mesh, P(self.data_axes, model_axis))
-        put = lambda x: jax.device_put(jnp.asarray(x), spec_edges)
-        self._subj = put(self.sg.subj_local)
-        self._pred = put(self.sg.pred)
-        self._obj = put(self.sg.obj)
+        self._spec_edges = NamedSharding(mesh, P(self.data_axes, model_axis))
         self._spec_rows = NamedSharding(mesh, P(None, self.data_axes, None))
         self._rep = NamedSharding(mesh, P())
         self._step = jax.jit(make_superstep_batched(
             mesh, self.data_axes, model_axis))
+        self.refresh_edges(dg)
+
+    def refresh_edges(self, dg) -> None:
+        """(Re)partition the edge arrays over the mesh — called at build
+        and after every live-update mutation batch, with ``dg`` any
+        object carrying effective ``subj``/``pred``/``obj`` arrays (base
+        edges with tombstones relabeled inert, delta rows appended).
+        Node count and label alphabet are fixed between rebuilds, so the
+        row partition and plane tables are untouched; only the per-shard
+        edge arrays (and their padded length, when the overlay grows
+        past a power of two) change."""
+        self.sg = ShardedGraph.from_dense(dg, self.num_shards,
+                                          pad_multiple=self._pad_multiple)
+        put = lambda x: jax.device_put(jnp.asarray(x), self._spec_edges)
+        self._subj = put(self.sg.subj_local)
+        self._pred = put(self.sg.pred)
+        self._obj = put(self.sg.obj)
+        self.edge_refreshes += 1
 
     def pad_nodes(self, planes: np.ndarray) -> np.ndarray:
         """[R, V, S] start planes -> [R, V_pad, S] (trailing zero rows)."""
@@ -338,8 +351,12 @@ class ShardedDenseExec:
 
     def _pad_tables(self, Bstk: np.ndarray) -> np.ndarray:
         """[R, L, S] label tables -> [R, L+1, S]: append the all-zero row
-        of the reserved padding label, so padding edges are inert."""
+        of the reserved inert label, so padding (and tombstoned) edges
+        match nothing.  Plan tables built by ``dense._plane_tables``
+        already carry the inert row — those pass through unchanged."""
         R, L, S = Bstk.shape
+        if L == self.num_labels + 1:
+            return Bstk
         out = np.zeros((R, L + 1, S), dtype=Bstk.dtype)
         out[:, :L] = Bstk
         return out

@@ -80,6 +80,26 @@ def decision_key(expr: Union[str, rx.Node], subject_bound: bool,
             policy)
 
 
+def query_footprint(ast: Union[str, rx.Node], resolve,
+                    num_preds: int) -> frozenset:
+    """RAW predicate ids an expression's answer can depend on — the
+    invalidation granularity of the live-update subsystem: a mutation to
+    raw predicate p expires exactly the cache entries whose footprint
+    contains p.  Completed ids fold onto their raw predicate (p and ^p
+    are two views of the same mutable edge set); unresolvable literals
+    contribute nothing (evaluation would raise before caching)."""
+    node = rx.parse(ast) if isinstance(ast, str) else ast
+    out = set()
+    for lit in node.literals():
+        try:
+            c = resolve(lit)
+        except Exception:
+            continue
+        if 0 <= c < 2 * num_preds:
+            out.add(c % num_preds)
+    return frozenset(out)
+
+
 @dataclass
 class QueryStats:
     """Per-query work counters + the planner's decision record.
@@ -105,6 +125,13 @@ class QueryStats:
     kernel_tasks: int = 0
     result_cache_hits: int = 0
     result_cache_misses: int = 0
+    # live-update observability: the graph epoch the query evaluated at,
+    # and the engine-cumulative footprint-invalidation counters at that
+    # moment (how many ResultCache / decision-PlanCache entries mutations
+    # have expired so far)
+    epoch: int = 0
+    result_cache_invalidations: int = 0
+    plan_cache_invalidations: int = 0
     plan_mode: str = ""
     plan_split_pred: int = -1
     plan_est_cost: float = 0.0
@@ -152,11 +179,17 @@ class PlanCache:
     def __init__(self, max_entries: int = 1024):
         self.max_entries = max_entries
         self._entries: Dict[Any, Any] = {}
+        self._foot: Dict[Any, frozenset] = {}   # key -> predicate footprint
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
-    def get(self, key: Any, build: Callable[[], Any]) -> Any:
+    def get(self, key: Any, build: Callable[[], Any],
+            footprint: Optional[frozenset] = None) -> Any:
+        """``footprint``: raw predicate ids the cached value depends on —
+        see :meth:`invalidate_preds`.  Entries cached without one are
+        mutation-independent (e.g. compiled automata) and never expire."""
         plan = self._entries.pop(key, _MISSING)
         if plan is not _MISSING:
             self._entries[key] = plan  # re-insert: LRU recency refresh
@@ -168,20 +201,38 @@ class PlanCache:
         # stale copy so the re-insert below lands at MRU exactly once
         self._entries.pop(key, None)
         self._entries[key] = plan
+        if footprint is not None:
+            self._foot[key] = footprint
         while len(self._entries) > self.max_entries:
             # evict the least recently used (dict preserves order)
-            self._entries.pop(next(iter(self._entries)))
+            evicted = next(iter(self._entries))
+            self._entries.pop(evicted)
+            self._foot.pop(evicted, None)
             self.evictions += 1
         return plan
+
+    def invalidate_preds(self, preds) -> int:
+        """Expire entries whose footprint intersects the mutated raw
+        predicate set; untouched entries keep hitting.  Returns the
+        number expired (also accumulated in ``invalidations``)."""
+        preds = set(preds)
+        stale = [k for k, fp in self._foot.items() if fp & preds]
+        for k in stale:
+            self._entries.pop(k, None)
+            self._foot.pop(k, None)
+        self.invalidations += len(stale)
+        return len(stale)
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def clear(self) -> None:
         self._entries.clear()
+        self._foot.clear()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
 
 class ResultCache:
@@ -193,6 +244,16 @@ class ResultCache:
     later replays.  ``ttl_s`` bounds staleness (``None`` = never expires);
     ``max_entries`` bounds size with LRU eviction.  ``clock`` is
     injectable for deterministic TTL tests.
+
+    Live-update versioning: every entry carries the raw-predicate
+    ``footprint`` of its expression and the graph ``epoch`` it was
+    computed at.  A mutation expires exactly the entries whose footprint
+    touches a mutated predicate (:meth:`invalidate_preds` — eager), and
+    ``stale_checker`` (wired to
+    :meth:`repro.core.delta.DeltaOverlay.entry_is_stale` by mutable
+    engines) re-validates on every lookup, so a pre-mutation answer for
+    a query touching a mutated predicate is unservable *by construction*
+    — even if an eager invalidation were ever missed.
     """
 
     def __init__(self, max_entries: int = 4096, ttl_s: Optional[float] = None,
@@ -200,31 +261,58 @@ class ResultCache:
         self.max_entries = max_entries
         self.ttl_s = ttl_s
         self.clock = clock
-        self._entries: Dict[Any, Tuple[frozenset, float]] = {}
+        # key -> (value, stamp, footprint, epoch)
+        self._entries: Dict[Any, Tuple[frozenset, float, frozenset, int]] = {}
         self._limited = 0  # entries whose result_key carries a limit
+        self.stale_checker: Optional[Callable[[frozenset, int], bool]] = None
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.expirations = 0
+        self.invalidations = 0
 
     @staticmethod
     def _is_limited(key: Any) -> bool:
         return isinstance(key, tuple) and len(key) == 4 and key[3] is not None
 
+    def _drop(self, key: Any) -> None:
+        if self._is_limited(key):
+            self._limited -= 1
+
     def _lookup(self, key: Any) -> Optional[frozenset]:
-        """TTL-checked fetch with LRU recency refresh; no hit/miss
-        accounting (callers count exactly one hit or miss per probe)."""
+        """TTL- and epoch-checked fetch with LRU recency refresh; no
+        hit/miss accounting (callers count exactly one hit or miss per
+        probe)."""
         entry = self._entries.pop(key, None)
         if entry is None:
             return None
-        value, stamp = entry
+        value, stamp, footprint, epoch = entry
         if self.ttl_s is not None and self.clock() - stamp > self.ttl_s:
             self.expirations += 1
-            if self._is_limited(key):
-                self._limited -= 1
+            self._drop(key)
+            return None
+        if self.stale_checker is not None \
+                and self.stale_checker(footprint, epoch):
+            # the epoch-tag guarantee: an answer predating a mutation to
+            # its footprint can never be served
+            self.invalidations += 1
+            self._drop(key)
             return None
         self._entries[key] = entry  # LRU recency refresh
         return value
+
+    def invalidate_preds(self, preds) -> int:
+        """Eagerly expire entries whose footprint intersects the mutated
+        raw predicate set; entries over untouched predicates keep
+        hitting.  Returns the number expired (also accumulated in
+        ``invalidations``)."""
+        preds = set(preds)
+        stale = [k for k, e in self._entries.items() if e[2] & preds]
+        for k in stale:
+            self._entries.pop(k)
+            self._drop(k)
+        self.invalidations += len(stale)
+        return len(stale)
 
     def get(self, key: Any) -> Optional[frozenset]:
         value = self._lookup(key)
@@ -268,21 +356,23 @@ class ResultCache:
                 self.hits += 1
                 trunc = frozenset(truncate_result(value, limit))
                 entry = self._entries.get(src)
-                if entry is not None:       # inherit the source's stamp
-                    self._insert(key, trunc, entry[1])
+                if entry is not None:   # inherit stamp/footprint/epoch
+                    self._insert(key, trunc, entry[1], entry[2], entry[3])
                 return trunc
         self.misses += 1
         return None
 
-    def put(self, key: Any, value: Set[Tuple[int, int]]) -> None:
-        self._insert(key, frozenset(value), self.clock())
+    def put(self, key: Any, value: Set[Tuple[int, int]],
+            footprint: frozenset = frozenset(), epoch: int = 0) -> None:
+        self._insert(key, frozenset(value), self.clock(), footprint, epoch)
 
-    def _insert(self, key: Any, value: frozenset, stamp: float) -> None:
+    def _insert(self, key: Any, value: frozenset, stamp: float,
+                footprint: frozenset = frozenset(), epoch: int = 0) -> None:
         if self.max_entries <= 0:
             return
         if self._entries.pop(key, None) is None and self._is_limited(key):
             self._limited += 1
-        self._entries[key] = (value, stamp)
+        self._entries[key] = (value, stamp, footprint, epoch)
         while len(self._entries) > self.max_entries:
             evicted = next(iter(self._entries))
             self._entries.pop(evicted)
@@ -300,6 +390,7 @@ class ResultCache:
         self.misses = 0
         self.evictions = 0
         self.expirations = 0
+        self.invalidations = 0
 
 
 def result_key(q: "Query") -> Tuple[str, Optional[int], Optional[int],
@@ -342,11 +433,14 @@ def publish_result(
     out: Set[Tuple[int, int]],
     idxs: Sequence[int],
     results: List[Optional[Set[Tuple[int, int]]]],
+    footprint: frozenset = frozenset(),
+    epoch: int = 0,
 ) -> None:
     """Shared ``eval_many`` completion: remember ``out`` in the result
-    cache and fan it out (as independent set copies) to every query
-    index that collapsed onto this key."""
-    cache.put(key, out)
+    cache — tagged with the query's predicate footprint and the graph
+    epoch it was computed at — and fan it out (as independent set
+    copies) to every query index that collapsed onto this key."""
+    cache.put(key, out, footprint=footprint, epoch=epoch)
     for i in idxs:
         results[i] = set(out)
 
@@ -398,6 +492,12 @@ def make_engine(graph, kind: str = "ring", **kwargs):
     additionally be split over a model axis).  Sharded results are
     identical to single-device ``eval`` — the mesh only changes where
     the supersteps run (see :mod:`repro.core.distributed`).
+
+    Live updates (both engines): the built engine exposes
+    ``add_edges``/``remove_edges``/``epoch``/``compact()`` — exact
+    delta-overlay mutations with epoch-versioned cache invalidation
+    (see :mod:`repro.core.delta`); ``compact_threshold=`` bounds the
+    overlay before it is folded back into a fresh base.
     """
     if kind == "ring":
         from .ring import Ring

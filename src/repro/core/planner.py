@@ -315,13 +315,18 @@ def choose_plan(ast: rx.Node, subject_bound: bool, obj_bound: bool,
 def decide(ast: rx.Node, subject_bound: bool, obj_bound: bool, *,
            policy: str, decisions, stats_provider: Callable[[], GraphStats],
            resolve: Callable[[rx.Lit], int], record=None,
-           unanchored_margin: float = 1.0) -> Plan:
+           unanchored_margin: float = 1.0,
+           footprint: Optional[frozenset] = None) -> Plan:
     """Engine-shared decision entry point: the ``planner="naive"``
     short-circuit, memoization in the engine's ``decisions`` PlanCache
     (keyed per (canonical expression, binding, policy) class), and the
     ``QueryStats.plan_*`` recording — one implementation for both
     engines.  ``stats_provider`` defers the :class:`GraphStats` harvest
-    to the first non-naive decision."""
+    to the first non-naive decision.  ``footprint`` (the expression's
+    raw predicate ids) registers the decision for live-update
+    invalidation: a mutation to a footprint predicate shifts the
+    selectivity statistics the decision was priced on, so the entry is
+    expired and re-planned at the new epoch."""
     if policy == "naive":
         plan = Plan(mode="naive")
     else:
@@ -329,7 +334,8 @@ def decide(ast: rx.Node, subject_bound: bool, obj_bound: bool, *,
         key = decision_key(ast, subject_bound, obj_bound, policy)
         plan = decisions.get(key, lambda: choose_plan(
             ast, subject_bound, obj_bound, stats_provider(), resolve,
-            policy, unanchored_margin=unanchored_margin))
+            policy, unanchored_margin=unanchored_margin),
+            footprint=footprint)
     if record is not None:
         record.plan_mode = plan.mode
         record.plan_split_pred = plan.split_pred

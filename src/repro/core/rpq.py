@@ -52,6 +52,18 @@ are memoized per canonical AST + binding in the ``decisions`` cache and
 recorded in ``QueryStats.plan_*``; ``planner="naive"`` bypasses the
 planner entirely and is the parity reference.
 
+Live updates (:mod:`repro.core.delta`): with a mutation overlay set,
+every frontier entry keys both its base L_p range and the overlay's
+delta adjacency for its object — the inserted edges become extra tasks
+in the SAME part-1.5 ``nfa_step`` batch, and tombstoned base triples are
+masked out during part-2 subject enumeration (per (s, p, obj) for
+single-object ranges; for the full range a subject drops only when all
+its base triples under the predicate are tombstoned, and covered-node
+Dv caching is suppressed while a predicate has tombstones so the cached
+intersections never claim a delivery a skipped leaf did not get).
+Results at every epoch equal a from-scratch rebuild of the effective
+triple set; see ``add_edges``/``remove_edges``/``compact``.
+
 A subject is reported when the initial NFA state activates.  Visited-mask
 soundness note: the paper stores at every internal L_s node v a mask D[v]
 (the intersection of leaf masks below) and updates it with D[v] |= D on
@@ -70,6 +82,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from . import delta as dl
 from . import planner as qp
 from . import regex as rx
 from .engines import (PlanBundle, PlanCache, QueryLike, QueryStats,
@@ -91,6 +104,27 @@ class _RingPlan:
 
     g: Glushkov
     Bv: Dict[Tuple[int, int], int]
+
+
+@dataclass
+class _Task:
+    """One wavefront-superstep transition task.
+
+    A *base* task is an L_s subject range ``[sb, se)`` under completed
+    predicate ``pred`` (``obj`` is the frontier entry's object, ``None``
+    for the full range — tombstone masking needs it).  A *delta* task
+    carries its ``subjects`` directly: the overlay's inserted adjacency
+    for (pred, obj).  Both kinds share the same ``masked = D & B[p]``
+    input and ride the same batched ``nfa_step`` dispatch — the delta
+    pass is ORed into the superstep, not a separate traversal."""
+
+    job: _Job
+    masked: int
+    pred: int
+    obj: Optional[int]
+    sb: int = 0
+    se: int = 0
+    subjects: Optional[List[int]] = None
 
 
 @dataclass
@@ -120,7 +154,7 @@ class _Job:
     reported: Set[int] = field(default_factory=set)
 
 
-class RingRPQ:
+class RingRPQ(dl.LiveUpdateEngine):
     """2RPQ engine over a :class:`Ring` (the paper's algorithm).
 
     ``wavefront=True`` (default) runs the superstep-batched traversal;
@@ -158,7 +192,9 @@ class RingRPQ:
                  planner: str = "cost",
                  stats: Optional[GraphStats] = None,
                  mesh=None, shards: Optional[int] = None,
-                 data_axes=None):
+                 data_axes=None,
+                 compact_threshold: Optional[int] =
+                 dl.DEFAULT_COMPACT_THRESHOLD):
         if planner not in ("cost", "naive", "forward", "reverse", "split"):
             raise ValueError(f"unknown planner policy {planner!r}")
         self.ring = ring
@@ -169,12 +205,16 @@ class RingRPQ:
         self.plans = PlanCache()
         self.decisions = PlanCache()
         self.results = result_cache if result_cache is not None else ResultCache()
+        self.delta: Optional[dl.DeltaOverlay] = None   # live-update overlay
+        self.compact_threshold = compact_threshold
+        self.compactions = 0
         self.bundle_kernel_batches = 0   # multi-plan nfa_step dispatches
         self.sharded_kernel_batches = 0  # mesh-sharded nfa_step dispatches
         self._auto_threshold: Optional[float] = None
         self._stats = stats
         self._edge_s: Optional[np.ndarray] = None   # completed triples,
         self._edge_o: Optional[np.ndarray] = None   # predicate-major order
+        self._edge_eff: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.mesh = None
         self.data_axes: tuple = ()
         self._task_step = None           # compiled sharded transition
@@ -188,10 +228,41 @@ class RingRPQ:
 
     @property
     def graph_stats(self) -> GraphStats:
-        """Selectivity statistics for the planner (lazy; injectable)."""
+        """Selectivity statistics for the planner (lazy; injectable).
+        With a live overlay, a fresh harvest reads the static ring, so
+        every predicate the overlay ever touched is refreshed from the
+        effective edges before first use."""
         if self._stats is None:
             self._stats = GraphStats.from_ring(self.ring)
+            self._refresh_touched_stats()
         return self._stats
+
+    # -- live updates (surface shared via delta.LiveUpdateEngine) ------------
+    def _base_graph(self):
+        return self.ring.graph
+
+    def _on_overlay_change(self, mutated_raw) -> None:
+        """Engine-side cache drops after a mutation batch: the
+        predicate-major seed-edge memo is rebuilt lazily against the new
+        overlay (the wavefront itself reads the overlay live)."""
+        self._edge_eff = {}
+
+    def compact(self) -> None:
+        """Fold the overlay into a fresh :class:`Ring` + statistics.
+        Logical no-op: results, the epoch counter, and surviving cache
+        entries are unchanged — only the physical base moves."""
+        if self.delta is None or self.delta.size == 0:
+            return
+        graph = self.effective_graph()
+        self.ring = Ring(graph)
+        s, p, o = graph.completed_triples()
+        self.delta.reset_after_compaction(
+            dl.pack_keys(s, p, o, graph.num_nodes, 2 * graph.num_preds))
+        self._edge_s = self._edge_o = None
+        self._edge_eff = {}
+        if self._stats is not None:
+            self._stats = GraphStats.from_ring(self.ring)
+        self.compactions += 1
 
     # -- public API ----------------------------------------------------------
     def eval(
@@ -238,7 +309,12 @@ class RingRPQ:
         import time as _time
         qs = [as_query(q) for q in queries]
         results: List[Optional[Set[Tuple[int, int]]]] = [None] * len(qs)
-        stats_list = [QueryStats() for _ in qs]
+        epoch = self.epoch
+        stats_list = [QueryStats(
+            epoch=epoch,
+            result_cache_invalidations=self.results.invalidations,
+            plan_cache_invalidations=self.decisions.invalidations,
+        ) for _ in qs]
         deadline = (_time.time() + deadline_s) if deadline_s else None
 
         def on_hit(idx, cached):
@@ -273,7 +349,8 @@ class RingRPQ:
                         raise TimeoutError("query deadline exceeded")
                 res = self.eval_ast(ast, q.subject, q.obj, q.limit, stats,
                                     remaining)
-                publish_result(self.results, key, res, idxs, results)
+                publish_result(self.results, key, res, idxs, results,
+                               footprint=self._footprint(ast), epoch=epoch)
                 continue
             null = rx.nullable(ast)
             if q.subject is not None and q.obj is not None:
@@ -281,7 +358,9 @@ class RingRPQ:
                     res = {(q.subject, q.obj)}
                     stats.results = len(res)
                     res = truncate_result(res, q.limit)
-                    publish_result(self.results, key, res, idxs, results)
+                    publish_result(self.results, key, res, idxs, results,
+                                   footprint=self._footprint(ast),
+                                   epoch=epoch)
                     continue
                 if qplan.mode == "reverse":
                     plan, start, tgt = (self._plan(rx.reverse(ast)),
@@ -325,7 +404,8 @@ class RingRPQ:
                 out.update((q.subject, o) for o in job.reported)
             job.stats.results = len(out)
             out = truncate_result(out, q.limit)
-            publish_result(self.results, key, out, pending[key], results)
+            publish_result(self.results, key, out, pending[key], results,
+                           footprint=self._footprint(ast), epoch=epoch)
 
         if stats_out is not None:
             stats_out.extend(stats_list)
@@ -337,6 +417,9 @@ class RingRPQ:
         self._deadline = (_time.time() + deadline_s) if deadline_s else None
         if stats is None:
             stats = QueryStats()
+        stats.epoch = self.epoch
+        stats.result_cache_invalidations = self.results.invalidations
+        stats.plan_cache_invalidations = self.decisions.invalidations
         V = self.ring.num_nodes
         out: Set[Tuple[int, int]] = set()
         null = rx.nullable(ast)
@@ -461,13 +544,14 @@ class RingRPQ:
         return qp.decide(ast, subject_bound, obj_bound,
                          policy=self.planner, decisions=self.decisions,
                          stats_provider=lambda: self.graph_stats,
-                         resolve=self._resolve_lit, record=stats)
+                         resolve=self._resolve_lit, record=stats,
+                         footprint=self._footprint(ast))
 
     # -- split / reverse plan execution ----------------------------------------
-    def _pred_edges(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
-        """(subjects, objects) of the completed triples labeled ``p`` —
-        the seed edges of a split plan.  Materialized predicate-major on
-        first use; C_p gives the block offsets."""
+    def _pred_edges_base(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(subjects, objects) of the *base* completed triples labeled
+        ``p``.  Materialized predicate-major on first use; C_p gives the
+        block offsets."""
         if self._edge_s is None:
             s, pa, o = self.ring.triples_completed()
             order = np.argsort(pa, kind="stable")
@@ -708,11 +792,12 @@ class RingRPQ:
             job.offset = bundle.offsets[index[id(job.plan)]]
         return bundle
 
-    def _transition_many(self, tasks: List[Tuple[_Job, int, int, int]],
+    def _transition_many(self, tasks: List[_Task],
                          bundle: PlanBundle) -> List[int]:
         """T'[mask] for every wavefront task — one batched ``nfa_step``
         call for the whole (possibly multi-plan) task list, or scalar
-        byte-split tables below threshold.
+        byte-split tables below threshold.  Base and delta tasks ride the
+        same batch: the transition sees only ``masked``.
 
         Multi-plan batches go through the bundle: each task's mask is
         lifted by its job's block offset, the kernel steps through the
@@ -721,12 +806,12 @@ class RingRPQ:
         """
         if not tasks:
             return []
-        masks = [t[3] for t in tasks]
+        masks = [t.masked for t in tasks]
         if len(masks) < self._resolve_threshold():
-            return [t[0].plan.g.Tp(m) for t, m in zip(tasks, masks)]
-        single_plan = all(t[0].plan is tasks[0][0].plan for t in tasks)
+            return [t.job.plan.g.Tp(m) for t, m in zip(tasks, masks)]
+        single_plan = all(t.job.plan is tasks[0].job.plan for t in tasks)
         if single_plan:
-            g = tasks[0][0].plan.g
+            g = tasks[0].job.plan.g
             W = g.nwords
             X = np.zeros((len(masks), W), dtype=np.uint32)
             for i, m in enumerate(masks):
@@ -742,7 +827,7 @@ class RingRPQ:
                     bundle.offsets, bundle.S_total)
             W = (bundle.S_total + 31) // 32
             X = np.zeros((len(masks), W), dtype=np.uint32)
-            shifts = [t[0].offset for t in tasks]
+            shifts = [t.job.offset for t in tasks]
             for i, (m, off) in enumerate(zip(masks, shifts)):
                 lifted = m << off
                 for w in range(W):
@@ -751,7 +836,7 @@ class RingRPQ:
             self.bundle_kernel_batches += 1
         counted = set()
         for t in tasks:
-            job = t[0]
+            job = t.job
             if id(job) not in counted:
                 counted.add(id(job))
                 job.stats.kernel_batches += 1
@@ -762,7 +847,7 @@ class RingRPQ:
             for w in range(W):
                 acc |= int(Y[i, w]) << (32 * w)
             if shifts is not None:
-                job = tasks[i][0]
+                job = tasks[i].job
                 acc = (acc >> shifts[i]) & ((1 << (job.plan.g.m + 1)) - 1)
             out.append(acc)
         return out
@@ -803,8 +888,12 @@ class RingRPQ:
         wt_p, wt_s = ring.wt_p, ring.wt_s
         s_levels = wt_s.levels
         bundle = self._bundle(jobs)
+        ov = self.delta if self.delta is not None and self.delta.size else None
 
-        queue: deque = deque()  # entries: (job, (b, e), D)
+        # entries: (job, object id | None for the full range, D) — the
+        # object id keys both the base L_p range and the overlay's delta
+        # adjacency / tombstone lookups
+        queue: deque = deque()
         for job in jobs:
             D0 = job.plan.g.F & ~1  # state 0 has no incoming edges; strip eps
             if D0 == 0:
@@ -815,12 +904,12 @@ class RingRPQ:
                 # starts with D0 under one shared visited mask
                 for v in job.start_objs:
                     job.Ds[v] = D0
-                    queue.append((job, ring.object_range(v), D0))
+                    queue.append((job, v, D0))
             elif job.start_obj is None:
-                queue.append((job, ring.full_range(), D0))
+                queue.append((job, None, D0))
             else:
                 job.Ds[job.start_obj] = D0
-                queue.append((job, ring.object_range(job.start_obj), D0))
+                queue.append((job, job.start_obj, D0))
 
         import time as _time
         while queue:
@@ -832,54 +921,113 @@ class RingRPQ:
             else:
                 chunk = [queue.popleft()]
             stepped = set()
-            for job, _rng, _D in chunk:
+            for job, _v, _D in chunk:
                 if not job.done and id(job) not in stepped:
                     stepped.add(id(job))
                     job.stats.supersteps += 1
 
             # ---- part 1: distinct predicates with D & B[p] != 0, over the
-            # whole chunk — yields the superstep's task list ----
-            tasks: List[Tuple[_Job, int, int, int]] = []  # (job, sb, se, D&B[p])
-            for job, (b, e), D in chunk:
-                if job.done or e <= b:
+            # whole chunk — yields the superstep's task list.  With a live
+            # overlay each entry also contributes its delta-adjacency
+            # tasks (the inserted edges of its object), so base and delta
+            # transitions share one part-1.5 batch ----
+            tasks: List[_Task] = []
+            for job, v, D in chunk:
+                if job.done:
                     continue
+                b, e = ring.object_range(v) if v is not None \
+                    else ring.full_range()
                 g, Bv, stats = job.plan.g, job.plan.Bv, job.stats
-                stats.bfs_steps += 1
-                if deadline is not None and stats.bfs_steps % 64 == 0 \
-                        and _time.time() > deadline:
-                    raise TimeoutError("query deadline exceeded")
+                delta_adj = ov.adds_for_obj(v) \
+                    if ov is not None and ov.has_adds else ()
+                if e > b or delta_adj:
+                    # the deadline probe must tick for overlay-only
+                    # entries too (an insert-heavy graph can traverse
+                    # entirely through delta adjacency)
+                    stats.bfs_steps += 1
+                    if deadline is not None and stats.bfs_steps % 64 == 0 \
+                            and _time.time() > deadline:
+                        raise TimeoutError("query deadline exceeded")
+                if e > b:
 
-                def prune_p(l, prefix, covered, D=D, Bv=Bv, stats=stats):
-                    stats.wt_nodes_visited += 1
-                    return (D & Bv.get((l, prefix), 0)) == 0
+                    def prune_p(l, prefix, covered, D=D, Bv=Bv, stats=stats):
+                        stats.wt_nodes_visited += 1
+                        return (D & Bv.get((l, prefix), 0)) == 0
 
-                for p, rb, re_ in wt_p.range_distinct(b, e, prune=prune_p):
-                    stats.predicates_enumerated += 1
+                    for p, rb, re_ in wt_p.range_distinct(b, e,
+                                                          prune=prune_p):
+                        stats.predicates_enumerated += 1
+                        masked = D & g.B.get(p, 0)
+                        if masked == 0:
+                            continue
+                        sb = int(ring.C_p[p]) + rb
+                        se = int(ring.C_p[p]) + re_
+                        if se <= sb:
+                            continue
+                        tasks.append(_Task(job=job, masked=masked, pred=p,
+                                           obj=v, sb=sb, se=se))
+                for p, subs in delta_adj:
                     masked = D & g.B.get(p, 0)
                     if masked == 0:
                         continue
-                    sb = int(ring.C_p[p]) + rb
-                    se = int(ring.C_p[p]) + re_
-                    if se <= sb:
-                        continue
-                    tasks.append((job, sb, se, masked))
+                    stats.predicates_enumerated += 1
+                    tasks.append(_Task(job=job, masked=masked, pred=p,
+                                       obj=v, subjects=subs))
 
             # ---- part 1.5: bit-parallel D-step for every task at once,
-            # across ALL jobs/plans in one batch ----
+            # across ALL jobs/plans (and both task kinds) in one batch ----
             steps = self._transition_many(tasks, bundle)
 
             # ---- parts 2+3, in task order (== each job's sequential FIFO
             # order, so per-job visited-mask evolution is identical) ----
-            next_front: List[Tuple[_Job, Tuple[int, int], int]] = []
-            for (job, sb, se, _masked), Dstep in zip(tasks, steps):
+            next_front: List[Tuple[_Job, int, int]] = []
+
+            def activate(job, s, Dstep):
+                """Parts 2b+3 for one subject: merge into the visited
+                mask, report on initial-state activation, requeue."""
+                stats = job.stats
+                old = job.Ds.get(s, 0)
+                Dnew = Dstep & ~old
+                if Dnew == 0:
+                    return False
+                job.Ds[s] = old | Dnew
+                stats.node_state_activations += bin(Dnew).count("1")
+                if Dnew & job.plan.g.initial:
+                    job.reported.add(s)
+                    if job.target is not None and s == job.target:
+                        job.done = True
+                        return True
+                next_front.append((job, s, Dnew))
+                return False
+
+            for task, Dstep in zip(tasks, steps):
+                job = task.job
                 if job.done or Dstep == 0:
                     continue
                 stats = job.stats
-                Ds, Dv = job.Ds, job.Dv
-                INIT = job.plan.g.initial
+                if task.subjects is not None:
+                    # delta task: the overlay IS the subject list
+                    for s in task.subjects:
+                        stats.subjects_enumerated += 1
+                        if activate(job, s, Dstep):
+                            break
+                    continue
+                Dv = job.Dv
+                # tombstoned base transitions are masked out at subject
+                # granularity: for a single-object task the (s, p, v)
+                # triple is checked directly; a full-range task drops a
+                # subject only when ALL its base triples under p are
+                # tombstoned.  While tombstones exist for p, covered-node
+                # Dv writes are suppressed (a skipped leaf would not have
+                # received Dstep, so the cached intersection would lie).
+                tomb = ov.tomb_pairs(task.pred) if ov is not None else None
+                excl = None
+                if tomb is not None and task.obj is None:
+                    excl = ov.excluded_subjects_full(
+                        task.pred, self._pred_edges_base(task.pred)[0])
 
                 def prune_s(l, prefix, covered, Dstep=Dstep, Dv=Dv,
-                            stats=stats):
+                            stats=stats, tomb=tomb):
                     stats.wt_nodes_visited += 1
                     if l == s_levels:
                         return False  # leaves handled on yield
@@ -887,25 +1035,21 @@ class RingRPQ:
                     dv = Dv.get(key, 0)
                     if Dstep & ~dv == 0:
                         return True
-                    if covered or self.paper_dv:
+                    if (covered or self.paper_dv) and tomb is None:
                         # sound update: only when the interval spans the whole
                         # node does every present leaf below receive Dstep
                         Dv[key] = dv | Dstep
                     return False
 
-                for s, _srb, _sre in wt_s.range_distinct(sb, se, prune=prune_s):
+                for s, _srb, _sre in wt_s.range_distinct(task.sb, task.se,
+                                                         prune=prune_s):
                     stats.subjects_enumerated += 1
-                    old = Ds.get(s, 0)
-                    Dnew = Dstep & ~old
-                    if Dnew == 0:
-                        continue
-                    Ds[s] = old | Dnew
-                    stats.node_state_activations += bin(Dnew).count("1")
-                    if Dnew & INIT:
-                        job.reported.add(s)
-                        if job.target is not None and s == job.target:
-                            job.done = True
-                            break
-                    # ---- part 3: subject becomes the next object range ----
-                    next_front.append((job, ring.object_range(s), Dnew))
+                    if tomb is not None:
+                        if task.obj is not None:
+                            if (s, task.obj) in tomb:
+                                continue
+                        elif s in excl:
+                            continue
+                    if activate(job, s, Dstep):
+                        break
             queue.extend(e for e in next_front if not e[0].done)

@@ -87,6 +87,25 @@ class GraphStats:
                    num_preds_completed=2 * P, freq=freq,
                    distinct_subj=ds, distinct_obj=do)
 
+    # -- live updates --------------------------------------------------------
+    def refresh_preds(self, preds_completed, pred_edges) -> None:
+        """Incremental update after a mutation batch: recompute frequency
+        and distinct-endpoint counts for exactly the mutated completed
+        predicates (``pred_edges(p)`` returns the *effective* (subjects,
+        objects) arrays — base minus tombstones plus the insert buffer),
+        leaving every untouched predicate's statistics in place.  Cost is
+        O(freq[p]) per mutated predicate, so the planner's forward /
+        reverse / split choices stay sound between compactions without a
+        full graph rescan."""
+        for p in preds_completed:
+            if not (0 <= p < self.num_preds_completed):
+                continue
+            sarr, oarr = pred_edges(p)
+            self.freq[p] = sarr.size
+            self.distinct_subj[p] = np.unique(sarr).size
+            self.distinct_obj[p] = np.unique(oarr).size
+        self.num_edges = int(self.freq.sum())
+
     # -- checkpoint serialization -------------------------------------------
     def to_state(self) -> Dict[str, np.ndarray]:
         """Flat array pytree for :mod:`repro.checkpoint` (scalars as 0-d

@@ -1,0 +1,393 @@
+"""Live-update subsystem: delta-overlay mutations vs a from-scratch
+rebuild oracle, epoch-versioned cache invalidation, online compaction,
+and mid-overlay checkpoint resume."""
+import random
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.engines import Query, QueryStats, make_engine, result_key
+from repro.core.fixtures import metro_graph, random_graph
+from repro.core.oracle import eval_oracle
+
+
+def _random_mutation(rnd, g, current):
+    """One mutation batch over the fixed dictionaries: a few inserts
+    (possibly duplicates), a few deletes (some present, some not)."""
+    V, P = g.num_nodes, g.num_preds
+    adds = [(rnd.randrange(V), rnd.randrange(P), rnd.randrange(V))
+            for _ in range(rnd.randrange(1, 4))]
+    rems = []
+    if current and rnd.random() < 0.8:
+        rems.append(rnd.choice(current))
+    rems.append((rnd.randrange(V), rnd.randrange(P), rnd.randrange(V)))
+    return adds, rems
+
+
+def _apply_raw(current, adds, rems):
+    cur = set(current)
+    cur |= set(adds)
+    cur -= set(rems)
+    return sorted(cur)
+
+
+def test_updates_rebuild_oracle_property_all_engines():
+    """THE acceptance property: at every epoch of a random interleaved
+    insert/delete/query workload, every engine variant — ring wavefront,
+    ring sequential, ring forced-kernel, dense — answers every query
+    shape exactly like a from-scratch evaluation of the effective edge
+    set."""
+    rnd = random.Random(41)
+    g = random_graph(13, 3, 40, seed=8, pred_zipf=False)
+    engines = {
+        "ring-wave": make_engine(g, "ring"),
+        "ring-seq": make_engine(g, "ring", wavefront=False),
+        "ring-kernel": make_engine(g, "ring", kernel_threshold=1),
+        "dense": make_engine(g, "dense"),
+    }
+    current = sorted({(int(s), int(p), int(o))
+                      for s, p, o in zip(g.s, g.p, g.o)})
+    exprs = ["0/1*", "(0|1)/2", "2+", "^1/0*", "0/1/2"]
+    for step in range(5):
+        adds, rems = _random_mutation(rnd, g, current)
+        current = _apply_raw(current, adds, rems)
+        for eng in engines.values():
+            eng.add_edges(adds)
+            eng.remove_edges(rems)
+        eff = engines["ring-wave"].effective_graph()
+        # the overlay's logical edge set IS the raw set-algebra result
+        assert sorted(zip(eff.s.tolist(), eff.p.tolist(),
+                          eff.o.tolist())) == current
+        expr = exprs[step % len(exprs)]
+        for (s, o) in [(None, None), (None, 3), (5, None), (5, 3)]:
+            want = eval_oracle(eff, expr, subject=s, obj=o)
+            for name, eng in engines.items():
+                assert eng.eval(expr, subject=s, obj=o) == want, \
+                    (step, name, expr, s, o)
+
+
+def test_updates_planner_shapes_rebuild_parity():
+    """Mutations under every planner policy (cost + all forced shapes +
+    naive) on both engines: split seed edges, reversed automata, and
+    grouped unanchored joins must all read the overlay."""
+    rnd = random.Random(17)
+    g = random_graph(12, 3, 45, seed=19, pred_zipf=False)
+    adds = [(1, 0, 3), (3, 1, 7), (7, 2, 1), (0, 2, 11)]
+    rems = [(int(g.s[i]), int(g.p[i]), int(g.o[i])) for i in (0, 5, 9)]
+    for policy in ("cost", "naive", "forward", "reverse", "split"):
+        for kind in ("ring", "dense"):
+            eng = make_engine(g, kind, planner=policy)
+            eng.eval("0/1/2")          # warm pre-mutation plan + caches
+            eng.add_edges(adds)
+            eng.remove_edges(rems)
+            eff = eng.effective_graph()
+            for expr in ("0/1/2", "0/1*", "2+"):
+                for (s, o) in [(None, None), (None, 3), (5, None), (5, 3)]:
+                    want = eval_oracle(eff, expr, subject=s, obj=o)
+                    have = eng.eval(expr, subject=s, obj=o)
+                    assert have == want, (policy, kind, expr, s, o)
+
+
+def test_updates_eval_many_and_limit():
+    """Batched evaluation (heterogeneous bundles, duplicates, limits)
+    over a mutated graph matches per-query eval and the rebuild oracle;
+    limited answers stay the deterministic sorted prefix."""
+    g = random_graph(12, 3, 40, seed=3, pred_zipf=False)
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        eng.eval_many([Query("0/1*", obj=2)])   # pre-mutation cache entry
+        eng.add_edges([(2, 0, 5), (5, 1, 2)])
+        eng.remove_edges([(int(g.s[1]), int(g.p[1]), int(g.o[1]))])
+        eff = eng.effective_graph()
+        qs = [Query("0/1*", obj=2), Query("2+", obj=3), Query("0/1*"),
+              Query("0/1*", obj=2), Query("0/1*", limit=3)]
+        res = eng.eval_many(qs)
+        for q, r in zip(qs, res):
+            want = eval_oracle(eff, q.expr, q.subject, q.obj)
+            if q.limit is not None and len(want) > q.limit:
+                want = set(sorted(want)[:q.limit])
+            assert r == want, (kind, q)
+            assert eng.eval(q.expr, q.subject, q.obj, q.limit) == want
+
+
+def test_updates_wavefront_sequential_activation_parity():
+    """With a live overlay the superstep-batched traversal still does
+    exactly the sequential reference's Theorem-4.1 work."""
+    g = random_graph(11, 3, 35, seed=23, pred_zipf=False)
+    wave = make_engine(g, "ring")
+    seq = make_engine(g, "ring", wavefront=False)
+    for eng in (wave, seq):
+        eng.add_edges([(1, 0, 4), (4, 1, 9), (9, 2, 1)])
+        eng.remove_edges([(int(g.s[2]), int(g.p[2]), int(g.o[2]))])
+    for expr in ("0/1*", "(0|1)/2", "2+"):
+        for (s, o) in [(None, 4), (1, None), (None, None)]:
+            st_w, st_s = QueryStats(), QueryStats()
+            rw = wave.eval(expr, subject=s, obj=o, stats=st_w)
+            rs = seq.eval(expr, subject=s, obj=o, stats=st_s)
+            assert rw == rs, (expr, s, o)
+            assert st_w.node_state_activations == \
+                st_s.node_state_activations, (expr, s, o)
+
+
+def test_update_cache_invalidation_footprint_precision():
+    """A mutation expires exactly the ResultCache/decision-cache entries
+    whose predicate footprint touches the mutated predicate; untouched
+    entries keep hitting; counters are surfaced in QueryStats."""
+    g = random_graph(12, 3, 40, seed=6, pred_zipf=False)
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        qs = [Query("0/1*", obj=2), Query("2+", obj=3), Query("^1", obj=4)]
+        r0 = eng.eval_many(qs)
+        h0 = eng.results.hits
+        eng.eval_many(qs)
+        assert eng.results.hits == h0 + 3, kind      # all replay
+        d0 = len(eng.decisions)
+        eng.add_edges([(0, 2, 1)])                   # mutate pred 2 only
+        # exactly the "2+" answer expired
+        assert eng.results.invalidations == 1, kind
+        assert len(eng.decisions) < d0 or d0 == 0    # its decision expired
+        h1, m1 = eng.results.hits, eng.results.misses
+        r1 = eng.eval_many(qs)
+        assert eng.results.hits == h1 + 2, kind      # 0/1* and ^1 still hit
+        assert eng.results.misses == m1 + 1, kind    # 2+ re-evaluated
+        assert r1[0] == r0[0] and r1[2] == r0[2], kind
+        assert r1[1] == eval_oracle(eng.effective_graph(), "2+", None, 3)
+        # the refreshed answer lands in per-query stats epochs
+        stats_out = []
+        if kind == "ring":
+            eng.eval_many(qs, stats_out=stats_out)
+            assert all(st.epoch == eng.epoch for st in stats_out)
+            assert all(st.result_cache_invalidations ==
+                       eng.results.invalidations for st in stats_out)
+
+
+def test_update_stale_answers_impossible_by_construction():
+    """Epoch tags make a pre-mutation answer unservable even when eager
+    invalidation is bypassed: an entry whose footprint predicate mutated
+    after its epoch is dropped at lookup."""
+    g = metro_graph()
+    eng = make_engine(g, "ring")
+    eng.add_edges([(0, 0, 1)])      # create the overlay (epoch 1)
+    key = result_key(Query("l5", obj=1))
+    fp = frozenset({g.pred_of("l5")})
+    # plant a fabricated pre-mutation entry by hand, then mutate l5
+    eng.results._insert(key, frozenset({(7, 7)}), eng.results.clock(),
+                        footprint=fp, epoch=eng.epoch)
+    assert eng.results.get(key) is not None          # valid at this epoch
+    eng.delta.apply(add=[(2, g.pred_of("l5"), 3)])   # bypass the engine path
+    assert eng.results.get(key) is None              # stale -> unservable
+    assert eng.results.invalidations >= 1
+    # TTL-style accounting: the drop counted as a miss, not a hit
+    assert eng.results.misses >= 1
+
+
+def test_updates_compaction_threshold_and_equivalence():
+    """Compaction is a logical no-op that empties the overlay: auto-
+    triggered by the threshold, preserves every answer and the epoch
+    counter, and the compacted engine keeps accepting mutations."""
+    rnd = random.Random(29)
+    g = random_graph(12, 3, 35, seed=31, pred_zipf=False)
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind, compact_threshold=12)
+        seen_compaction = False
+        current = sorted({(int(s), int(p), int(o))
+                          for s, p, o in zip(g.s, g.p, g.o)})
+        for step in range(6):
+            adds, rems = _random_mutation(rnd, g, current)
+            current = _apply_raw(current, adds, rems)
+            eng.add_edges(adds)
+            eng.remove_edges(rems)
+            seen_compaction |= eng.compactions > 0
+            eff = eng.effective_graph()
+            assert sorted(zip(eff.s.tolist(), eff.p.tolist(),
+                              eff.o.tolist())) == current, (kind, step)
+            want = eval_oracle(eff, "0/1*", None, None)
+            assert eng.eval("0/1*") == want, (kind, step)
+        assert seen_compaction, kind
+        assert eng.epoch == 12, kind     # epoch history survives compaction
+        # explicit compaction of whatever overlay is left: same answers
+        before = eng.eval("2+")
+        eng.compact()
+        assert eng.delta.size == 0
+        assert eng.eval("2+") == before
+
+
+def test_updates_checkpoint_resume_mid_overlay():
+    """The overlay rides repro.checkpoint: a restored engine resumes at
+    the same epoch with the same pending deltas (both engines), keeps
+    answering exactly, and keeps accepting mutations."""
+    from repro import checkpoint
+
+    g = random_graph(12, 3, 30, seed=4, pred_zipf=False)
+    src = make_engine(g, "ring")
+    src.add_edges([(1, 0, 3), (5, 1, 1), (2, 2, 9)])
+    src.remove_edges([(int(g.s[0]), int(g.p[0]), int(g.o[0]))])
+    want = {e: src.eval(e) for e in ("0/1*", "2+", "^1/0*")}
+
+    with tempfile.TemporaryDirectory() as d:
+        state = {"overlay": src.overlay_state(),
+                 "stats": src.graph_stats.to_state()}
+        checkpoint.save(d, 7, state)
+        target = {k: {kk: np.asarray(vv) for kk, vv in v.items()}
+                  for k, v in state.items()}
+        restored, _ = checkpoint.restore(d, target)
+        overlay_state = {k: np.asarray(v)
+                         for k, v in restored["overlay"].items()}
+        for kind in ("ring", "dense"):
+            eng = make_engine(g, kind)
+            eng.load_overlay(overlay_state)
+            assert eng.epoch == src.epoch == 2, kind
+            for e, w in want.items():
+                assert eng.eval(e) == w, (kind, e)
+            eng.add_edges([(0, 1, 7)])
+            assert eng.epoch == 3
+            eff = eng.effective_graph()
+            assert eng.eval("1") == eval_oracle(eff, "1"), kind
+
+
+def test_updates_dictionary_bounds_rejected():
+    """The node/predicate dictionaries are fixed between rebuilds: out-
+    of-range ids raise, and a failed batch leaves the engine untouched."""
+    g = metro_graph()
+    eng = make_engine(g, "ring")
+    with pytest.raises(ValueError):
+        eng.add_edges([(0, g.num_preds, 1)])
+    with pytest.raises(ValueError):
+        eng.add_edges([(g.num_nodes, 0, 1)])
+    with pytest.raises(ValueError):
+        eng.remove_edges([(0, 0, -1)])
+    assert eng.epoch == 0 and (eng.delta is None or eng.delta.size == 0)
+
+
+def test_updates_noop_mutations_and_double_ops():
+    """Set semantics: re-adding a present edge, removing an absent one,
+    add-then-remove, and remove-then-re-add all land on the exact
+    rebuild answer (and an inverse-direction query sees the completion
+    of every delta)."""
+    g = random_graph(10, 2, 20, seed=2, pred_zipf=False)
+    first = (int(g.s[0]), int(g.p[0]), int(g.o[0]))
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        eng.add_edges([first])                    # already present: no-op
+        eng.remove_edges([(9, 1, 9)] if (9, 1, 9) != first else [(8, 1, 8)])
+        eng.add_edges([(3, 1, 4)])
+        eng.remove_edges([(3, 1, 4)])             # buffered insert dropped
+        eng.remove_edges([first])
+        eng.add_edges([first])                    # un-tombstoned
+        eff = eng.effective_graph()
+        for expr in ("0", "1", "^0/1", "(0|1)+"):
+            for (s, o) in [(None, None), (None, 4), (3, None)]:
+                assert eng.eval(expr, subject=s, obj=o) == \
+                    eval_oracle(eff, expr, subject=s, obj=o), (kind, expr)
+
+
+def test_updates_sharded_multidevice_subprocess():
+    """The acceptance property on a forced 8-device host mesh: sharded
+    supersteps (both engines — dense row partition with refreshed edge
+    arrays, ring task-sharded transition) apply the same overlay and
+    agree with the rebuild oracle at every epoch."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import random
+        from repro.core.fixtures import random_graph
+        from repro.core.engines import Query, make_engine
+        from repro.core.oracle import eval_oracle
+
+        rnd = random.Random(3)
+        g = random_graph(18, 3, 60, seed=5, pred_zipf=False)
+        shd_d = make_engine(g, "dense", shards=8)
+        shd_r = make_engine(g, "ring", shards=8, kernel_threshold=1)
+        for step in range(3):
+            adds = [(rnd.randrange(18), rnd.randrange(3), rnd.randrange(18))
+                    for _ in range(4)]
+            rems = [(rnd.randrange(18), rnd.randrange(3), rnd.randrange(18))
+                    for _ in range(2)]
+            for e in (shd_d, shd_r):
+                e.add_edges(adds); e.remove_edges(rems)
+            eff = shd_d.effective_graph()
+            for expr in ("0/1*", "(0|1)/2", "2+"):
+                for s, o in [(None, 3), (5, None), (None, None)]:
+                    want = eval_oracle(eff, expr, subject=s, obj=o)
+                    assert shd_d.eval(expr, s, o) == want, \\
+                        ("dense", step, expr, s, o)
+                    assert shd_r.eval(expr, s, o) == want, \\
+                        ("ring", step, expr, s, o)
+            qs = [Query(e, obj=3) for e in ("0/1*", "2+")]
+            assert shd_d.eval_many(qs) == shd_r.eval_many(qs)
+        assert shd_d.sharded.dispatches > 0
+        assert shd_d.sharded.edge_refreshes > 1
+        assert shd_r.sharded_kernel_batches > 0
+        print("UPDATES_SHARDED_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=540,
+                       env={**__import__('os').environ, "PYTHONPATH": "src"},
+                       cwd=__import__('os').path.dirname(
+                           __import__('os').path.dirname(__file__)))
+    assert "UPDATES_SHARDED_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_updates_overlay_deadline_enforced():
+    """Regression: ``deadline_s`` must tick on overlay-only wavefront
+    work — a traversal whose adjacency comes entirely from the insert
+    buffer (empty base ranges) still raises TimeoutError."""
+    from repro.core.ring import LabeledGraph
+
+    g = LabeledGraph.from_arrays([0], [1], [1],
+                                 num_nodes=140, num_preds=2)
+    eng = make_engine(g, "ring")
+    # a 130-hop chain that exists ONLY in the overlay
+    eng.add_edges([(i, 0, i + 1) for i in range(2, 132)])
+    want = eng.eval("0+", obj=131)          # no deadline: completes
+    assert (2, 131) in want
+    with pytest.raises(TimeoutError):
+        eng.eval("0+", obj=131, deadline_s=1e-9)
+    # and recovers afterwards
+    assert eng.eval("0+", obj=131) == want
+
+
+def test_updates_load_overlay_invalidates_warm_caches():
+    """load_overlay on a WARM engine expires every cached answer and
+    planner decision touching a predicate the overlay mutated — the
+    restore can never serve pre-overlay state."""
+    g = random_graph(12, 3, 40, seed=21, pred_zipf=False)
+    src = make_engine(g, "ring")
+    src.add_edges([(1, 2, 3), (3, 2, 5)])
+    state = src.overlay_state()
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)           # warm, pristine-epoch caches
+        r_untouched = eng.eval_many([Query("0/1*", obj=2)])[0]
+        eng.eval_many([Query("2+", obj=3)])
+        inv0 = eng.results.invalidations
+        eng.load_overlay(state)
+        assert eng.results.invalidations > inv0, kind   # "2+" expired
+        h0 = eng.results.hits
+        assert eng.eval_many([Query("0/1*", obj=2)])[0] == r_untouched
+        assert eng.results.hits == h0 + 1, kind         # pred-0/1 still hits
+        want = eval_oracle(eng.effective_graph(), "2+", None, 3)
+        assert eng.eval_many([Query("2+", obj=3)])[0] == want, kind
+
+
+def test_updates_stats_refresh_keeps_planner_sound():
+    """GraphStats track the effective edge set incrementally: after a
+    mutation batch the refreshed frequencies/distinct counts equal a
+    from-scratch harvest of the effective graph."""
+    from repro.core.stats import GraphStats
+
+    g = random_graph(14, 3, 50, seed=13, pred_zipf=False)
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        eng.eval("0/1*", obj=2)       # force the lazy harvest
+        eng.add_edges([(1, 0, 3), (3, 2, 7), (7, 2, 1)])
+        eng.remove_edges([(int(g.s[0]), int(g.p[0]), int(g.o[0]))])
+        want = GraphStats.from_graph(eng.effective_graph())
+        have = eng.graph_stats
+        assert np.array_equal(have.freq, want.freq), kind
+        assert np.array_equal(have.distinct_subj, want.distinct_subj), kind
+        assert np.array_equal(have.distinct_obj, want.distinct_obj), kind
+        assert have.num_edges == want.num_edges, kind
