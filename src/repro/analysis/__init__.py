@@ -1,0 +1,31 @@
+"""Static invariant analyzer: jaxpr/HLO trace audit + repo lint gate.
+
+Two layers (run both with ``python -m repro.analysis``):
+
+* :mod:`repro.analysis.trace_audit` lowers the hot entry points against
+  abstract shapes and audits the jaxprs/HLO (dtype contracts, forbidden
+  host round-trips, pow2 padding, retrace budgets, collective bytes) —
+  rules T001–T006.
+* :mod:`repro.analysis.lint` walks the repo's ASTs for determinism and
+  dispatch-contract violations ordinary linters cannot see — rules
+  R001–R005.
+
+Findings are gated against the checked-in ``baseline.json`` allowlist;
+see :mod:`repro.analysis.findings`.
+
+This module deliberately does NOT import the jax-heavy trace-audit layer
+at package-import time, so ``from repro.analysis import lint`` stays
+cheap inside editors and pre-commit hooks.
+"""
+from .findings import Finding, filter_new, load_baseline, write_baseline
+from .lint import DEFAULT_LINT_DIRS, lint_file, run_lint
+
+__all__ = [
+    "DEFAULT_LINT_DIRS",
+    "Finding",
+    "filter_new",
+    "lint_file",
+    "load_baseline",
+    "run_lint",
+    "write_baseline",
+]

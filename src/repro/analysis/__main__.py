@@ -1,0 +1,105 @@
+"""CLI for the static invariant analyzer.
+
+    python -m repro.analysis             # --all (lint + trace audit)
+    python -m repro.analysis --lint      # AST rules only (no jax import)
+    python -m repro.analysis --trace     # jaxpr/HLO audit only
+    python -m repro.analysis --json out.json
+    python -m repro.analysis --write-baseline
+    python -m repro.analysis --force-host-devices 8 --trace
+
+Exit status 0 iff no finding survives the baseline filter — this is the
+CI gate.  ``--force-host-devices N`` must set XLA_FLAGS before jax is
+imported, which is why the trace-audit import happens inside ``main``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+from .findings import (Finding, filter_new, load_baseline, render_report,
+                       to_json, write_baseline)
+from .lint import run_lint
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def _find_root(start: Path) -> Path:
+    """Repo root = nearest ancestor holding src/repro (falls back to
+    cwd, which run_lint tolerates: missing dirs are skipped)."""
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return start
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO trace audit + repo-specific lint gate")
+    ap.add_argument("--lint", action="store_true",
+                    help="run only the AST lint rules (R001-R005)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run only the jaxpr/HLO trace audit (T001-T006)")
+    ap.add_argument("--all", action="store_true",
+                    help="run both layers (default when neither is given)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline allowlist JSON (default: the checked-in "
+                         "src/repro/analysis/baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from the current finding "
+                         "set and exit 0")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="also write the full finding list as JSON")
+    ap.add_argument("--force-host-devices", type=int, default=0, metavar="N",
+                    help="force N XLA host devices (multi-device trace "
+                         "audit on CPU); must be set before jax imports, "
+                         "so pass it rather than exporting XLA_FLAGS")
+    args = ap.parse_args(argv)
+
+    run_both = args.all or not (args.lint or args.trace)
+    root = args.root or _find_root(Path.cwd())
+
+    if args.force_host_devices:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count="
+            f"{args.force_host_devices}")
+
+    findings: list[Finding] = []
+    notes: list[str] = []
+    if run_both or args.lint:
+        findings += run_lint(root)
+    if run_both or args.trace:
+        from .trace_audit import run_trace_audit  # jax import lives here
+        t_findings, t_notes = run_trace_audit(root)
+        findings += t_findings
+        notes += t_notes
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"baseline written: {args.baseline} "
+              f"({len(findings)} finding(s) allowlisted)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new = filter_new(findings, baseline)
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps({
+            "new": to_json(new),
+            "baselined": len(findings) - len(new),
+            "notes": notes,
+        }, indent=1) + "\n")
+    print(render_report(new, baselined=len(findings) - len(new),
+                        notes=notes))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

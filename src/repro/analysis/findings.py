@@ -1,0 +1,107 @@
+"""Finding model, report rendering, and the baseline allowlist.
+
+A :class:`Finding` is one analyzer hit: ``file:line``, a rule id
+(``R00x`` for the AST lint layer, ``T00x`` for the lowering-time trace
+audit), a message, and a fix hint.  Findings are *fingerprinted* by
+``(file, rule, hash of the stripped source snippet)`` — deliberately not
+by line number, so unrelated edits that shift a pre-existing finding
+down the file do not make it look new.
+
+The baseline file is a checked-in JSON allowlist of fingerprints: the CI
+gate fails only on findings whose fingerprint is not baselined, so
+pre-existing debt can be grandfathered per-entry (each entry carries a
+justification) while every NEW violation still fails the build.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer hit.  ``snippet`` is the stripped source line (or a
+    stable descriptor for trace-audit findings) — the fingerprint input."""
+
+    file: str           # repo-relative posix path
+    line: int           # 1-based; 0 = whole-file / non-source finding
+    rule: str           # "R001".."R005" lint, "T001".."T006" trace audit
+    message: str
+    hint: str = ""
+    snippet: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        digest = hashlib.sha256(self.snippet.strip().encode()).hexdigest()
+        return f"{self.file}:{self.rule}:{digest[:16]}"
+
+    def render(self) -> str:
+        out = f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+def load_baseline(path: Path) -> Set[str]:
+    """Fingerprints allowlisted by the checked-in baseline (empty set
+    when the file is absent — absence means 'nothing grandfathered')."""
+    path = Path(path)
+    if not path.exists():
+        return set()
+    doc = json.loads(path.read_text())
+    return {entry["fingerprint"] for entry in doc.get("findings", [])}
+
+
+def write_baseline(path: Path, findings: Sequence[Finding],
+                   justification: str = "grandfathered pre-existing finding"
+                   ) -> None:
+    """Regenerate the baseline from the current finding set.  Every entry
+    records the finding it allowlists plus a justification placeholder —
+    review and edit the justifications before committing."""
+    doc = {
+        "comment": "Allowlisted pre-existing findings; the gate fails "
+                   "only on fingerprints not in this file.  Regenerate "
+                   "with `python -m repro.analysis --write-baseline`.",
+        "findings": [
+            {
+                "fingerprint": f.fingerprint,
+                "file": f.file,
+                "rule": f.rule,
+                "message": f.message,
+                "justification": justification,
+            }
+            for f in sorted(findings, key=lambda f: (f.file, f.rule, f.line))
+        ],
+    }
+    Path(path).write_text(json.dumps(doc, indent=1) + "\n")
+
+
+def filter_new(findings: Iterable[Finding],
+               baseline: Set[str]) -> List[Finding]:
+    """Findings not covered by the baseline — what the gate fails on."""
+    return [f for f in findings if f.fingerprint not in baseline]
+
+
+def to_json(findings: Sequence[Finding]) -> List[Dict]:
+    return [dict(asdict(f), fingerprint=f.fingerprint) for f in findings]
+
+
+def render_report(findings: Sequence[Finding],
+                  baselined: int = 0,
+                  notes: Sequence[str] = ()) -> str:
+    lines: List[str] = []
+    for note in notes:
+        lines.append(f"note: {note}")
+    for f in sorted(findings, key=lambda f: (f.file, f.line, f.rule)):
+        lines.append(f.render())
+    if baselined:
+        lines.append(f"({baselined} pre-existing finding(s) allowlisted "
+                     "by the baseline)")
+    if findings:
+        lines.append(f"FAIL: {len(findings)} new finding(s)")
+    else:
+        lines.append("OK: no new findings")
+    return "\n".join(lines)

@@ -1,0 +1,560 @@
+"""Repo-specific AST lint rules (layer 2 of the static analyzer).
+
+Five rules encode invariants that ordinary linters cannot see because
+they are about *this* codebase's determinism and device-dispatch
+contracts:
+
+R001  nondeterministic iteration: a Python ``set`` iterated in an
+      order-sensitive position (list construction, ``np.fromiter``,
+      generator feeding an ordered consumer).  Sets hash-order their
+      elements, so results built from them differ run-to-run — which
+      breaks result determinism and, worse, jit cache keys.  Dict
+      iteration is exempt (insertion-ordered since 3.7); wrap set
+      iteration in ``sorted(...)`` instead.
+R002  host sync inside a wavefront superstep loop: ``.item()``,
+      ``np.asarray(...)``, or ``bool/int/float(<tracer>)`` in the body
+      of a ``while`` loop that dispatches step/chunk work.  Each such
+      call blocks the host on the device queue, serialising supersteps.
+      The loop *test* is exempt — the convergence check is the one
+      designed sync point per iteration.
+R003  kernel parity completeness: every kernel named in
+      ``kernels/__init__.PALLAS_KERNELS`` must have a pure-jnp oracle
+      ``<name>_ref`` in ``kernels/ref.py`` and a test referencing it.
+R004  optional-dependency imports at module top level: ``hypothesis``,
+      ``zstandard``, and ``jax.experimental.shard_map`` must be
+      imported behind the repo's try/except shim pattern (or inside a
+      function), so minimal installs still import cleanly.
+R005  engine mutation bypassing the delta overlay router: all edge
+      add/remove paths outside ``core/delta.py`` must go through
+      ``delta.apply_engine_updates`` — direct overlay mutation skips
+      epoch bumps and cache invalidation.
+
+Findings can be suppressed inline with ``# repro: noqa R00X`` on the
+flagged line (justification after an em-dash is encouraged), or
+grandfathered via the checked-in baseline (see ``findings.py``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+# Directories the gate lints by default (repo-relative).  tests/ are
+# deliberately out of scope: they may poke internals (e.g. the delta
+# overlay) to assert on them.
+DEFAULT_LINT_DIRS = (
+    "src/repro/core",
+    "src/repro/kernels",
+    "src/repro/analysis",
+    "examples",
+    "benchmarks",
+)
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\s+(R\d{3}(?:\s*,\s*R\d{3})*)")
+
+# R001 -----------------------------------------------------------------
+# Calls whose argument order does not matter — a ListComp/GeneratorExp
+# directly inside one of these is not order-sensitive.
+_ORDER_EXEMPT_WRAPPERS = {
+    "sorted", "set", "frozenset", "sum", "min", "max", "any", "all", "len",
+}
+# Consumers that materialise a generator in iteration order.
+_ORDERED_GEN_CONSUMERS = {
+    "list", "tuple", "enumerate", "fromiter", "asarray", "array", "join",
+    "stack", "concatenate",
+}
+
+# R002 -----------------------------------------------------------------
+_HOST_SYNC_NP_FUNCS = {"asarray", "array"}
+_NP_MODULE_NAMES = {"np", "numpy", "onp"}
+
+# R005 -----------------------------------------------------------------
+_OVERLAY_MUTATORS = {
+    "_add_completed", "_remove_completed", "_insert_extra", "_insert_tomb",
+    "_drop_extra", "_drop_tomb",
+}
+_OVERLAY_RECEIVER_NAMES = {"ov", "overlay", "delta"}
+
+# R004 -----------------------------------------------------------------
+_OPTIONAL_MODULES = {"hypothesis", "zstandard", "jax.experimental.shard_map"}
+
+
+def _call_name(func: ast.expr) -> str:
+    """Trailing identifier of a call target: ``f`` for f(...), ``m`` for
+    obj.m(...); empty string for anything fancier."""
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return ""
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node  # type: ignore[attr-defined]
+
+
+def _parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_repro_parent", None)
+
+
+def _noqa_rules(source_lines: Sequence[str], lineno: int) -> Set[str]:
+    if not (1 <= lineno <= len(source_lines)):
+        return set()
+    m = _NOQA_RE.search(source_lines[lineno - 1])
+    if not m:
+        return set()
+    return {r.strip() for r in m.group(1).split(",")}
+
+
+def _snippet(source_lines: Sequence[str], lineno: int) -> str:
+    if 1 <= lineno <= len(source_lines):
+        return source_lines[lineno - 1].strip()
+    return ""
+
+
+# ---------------------------------------------------------------------
+# R001: set-typed expression inference
+# ---------------------------------------------------------------------
+
+def _ann_str(node: Optional[ast.expr]) -> str:
+    if node is None:
+        return ""
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ""
+
+
+def _is_set_annotation(ann: str) -> bool:
+    return ann.startswith(("Set[", "set[", "typing.Set[", "FrozenSet[",
+                           "frozenset["))
+
+
+def _is_dict_of_set_annotation(ann: str) -> bool:
+    if not ann.startswith(("Dict[", "dict[", "typing.Dict[",
+                           "DefaultDict[", "defaultdict[")):
+        return False
+    return "Set[" in ann or "set[" in ann
+
+
+class _ClassAttrKinds:
+    """Per-class map of ``self.<attr>`` names known to hold sets, or
+    dicts whose *values* are sets (so ``self.x[k]`` / ``self.x.get(k)``
+    yields a set)."""
+
+    def __init__(self, cls: ast.ClassDef):
+        self.set_attrs: Set[str] = set()
+        self.dict_of_set_attrs: Set[str] = set()
+        for node in ast.walk(cls):
+            # self.x: Set[...] = ...   /   self.x: Dict[..., Set[...]]
+            if isinstance(node, ast.AnnAssign):
+                target = node.target
+                name = None
+                if isinstance(target, ast.Attribute) and \
+                        isinstance(target.value, ast.Name) and \
+                        target.value.id == "self":
+                    name = target.attr
+                elif isinstance(target, ast.Name) and \
+                        _parent(node) is cls:
+                    name = target.id
+                if name:
+                    ann = _ann_str(node.annotation)
+                    if _is_set_annotation(ann):
+                        self.set_attrs.add(name)
+                    elif _is_dict_of_set_annotation(ann):
+                        self.dict_of_set_attrs.add(name)
+            # self.x = set()  (un-annotated)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                target = node.targets[0]
+                if isinstance(target, ast.Attribute) and \
+                        isinstance(target.value, ast.Name) and \
+                        target.value.id == "self" and \
+                        _is_set_literalish(node.value):
+                    self.set_attrs.add(target.attr)
+
+
+def _is_set_literalish(node: ast.expr) -> bool:
+    """Syntactically-evident set construction (no inference needed)."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and \
+            _call_name(node.func) in {"set", "frozenset"}:
+        return True
+    return False
+
+
+def _is_set_expr(node: ast.expr, local_sets: Set[str],
+                 attrs: Optional[_ClassAttrKinds]) -> bool:
+    if _is_set_literalish(node):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in local_sets
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self" \
+            and attrs is not None:
+        return node.attr in attrs.set_attrs
+    # self.x[k] where x: Dict[..., Set[...]]
+    if isinstance(node, ast.Subscript):
+        base = node.value
+        if isinstance(base, ast.Attribute) and \
+                isinstance(base.value, ast.Name) and base.value.id == "self" \
+                and attrs is not None:
+            return base.attr in attrs.dict_of_set_attrs
+        return False
+    # self.x.get(k, ...) on a dict-of-set attribute
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        if node.func.attr == "get":
+            base = node.func.value
+            if isinstance(base, ast.Attribute) and \
+                    isinstance(base.value, ast.Name) and \
+                    base.value.id == "self" and attrs is not None:
+                return base.attr in attrs.dict_of_set_attrs
+        # set ops returning sets: a.union(b), a.intersection(b), ...
+        if node.func.attr in {"union", "intersection", "difference",
+                              "symmetric_difference"}:
+            return _is_set_expr(node.func.value, local_sets, attrs)
+    # set algebra: (a | b) where either side is a set
+    if isinstance(node, ast.BinOp) and \
+            isinstance(node.op, (ast.BitOr, ast.BitAnd, ast.Sub)):
+        return (_is_set_expr(node.left, local_sets, attrs) or
+                _is_set_expr(node.right, local_sets, attrs))
+    return False
+
+
+def _collect_local_sets(fn: ast.AST) -> Set[str]:
+    """Names assigned an evidently-set value anywhere in the function."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                _is_set_literalish(node.value):
+            names.add(node.targets[0].id)
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and \
+                _is_set_annotation(_ann_str(node.annotation)):
+            names.add(node.target.id)
+    return names
+
+
+def _enclosing_class(node: ast.AST) -> Optional[ast.ClassDef]:
+    cur = _parent(node)
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef):
+            return cur
+        cur = _parent(cur)
+    return None
+
+
+def _enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    cur = _parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = _parent(cur)
+    return None
+
+
+def _for_body_is_order_sensitive(for_node: ast.For) -> bool:
+    """A for-over-set is flagged only when the body visibly builds an
+    ordered result: append/extend on something, or a yield."""
+    for node in ast.walk(for_node):
+        if isinstance(node, (ast.Yield, ast.YieldFrom)):
+            return True
+        if isinstance(node, ast.Call) and \
+                _call_name(node.func) in {"append", "extend"}:
+            return True
+    return False
+
+
+def _rule_r001(tree: ast.Module, rel: str,
+               lines: Sequence[str]) -> Iterable[Finding]:
+    attr_cache: Dict[int, _ClassAttrKinds] = {}
+    fn_cache: Dict[int, Set[str]] = {}
+
+    def env_for(node: ast.AST) -> Tuple[Set[str], Optional[_ClassAttrKinds]]:
+        fn = _enclosing_function(node)
+        local = set()
+        if fn is not None:
+            key = id(fn)
+            if key not in fn_cache:
+                fn_cache[key] = _collect_local_sets(fn)
+            local = fn_cache[key]
+        cls = _enclosing_class(node)
+        attrs = None
+        if cls is not None:
+            key = id(cls)
+            if key not in attr_cache:
+                attr_cache[key] = _ClassAttrKinds(cls)
+            attrs = attr_cache[key]
+        return local, attrs
+
+    hint = ("iterate sorted(<set>) (or restructure to a list/dict) so "
+            "results and jit keys do not depend on hash order")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.For):
+            local, attrs = env_for(node)
+            if _is_set_expr(node.iter, local, attrs) and \
+                    _for_body_is_order_sensitive(node):
+                yield Finding(rel, node.lineno, "R001",
+                              "iterating a set in an order-sensitive loop "
+                              "(body appends/yields)",
+                              hint, _snippet(lines, node.lineno))
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            gens = node.generators
+            if not gens:
+                continue
+            local, attrs = env_for(node)
+            if not _is_set_expr(gens[0].iter, local, attrs):
+                continue
+            parent = _parent(node)
+            wrapper = ""
+            if isinstance(parent, ast.Call):
+                wrapper = _call_name(parent.func)
+            if isinstance(node, ast.ListComp):
+                if wrapper in _ORDER_EXEMPT_WRAPPERS:
+                    continue
+                yield Finding(rel, node.lineno, "R001",
+                              "list built by iterating a set — element "
+                              "order is hash-dependent",
+                              hint, _snippet(lines, node.lineno))
+            else:  # GeneratorExp: only flag when fed to an ordered consumer
+                if wrapper in _ORDERED_GEN_CONSUMERS and \
+                        wrapper not in _ORDER_EXEMPT_WRAPPERS:
+                    yield Finding(rel, node.lineno, "R001",
+                                  f"set iterated through a generator into "
+                                  f"ordered consumer {wrapper}()",
+                                  hint, _snippet(lines, node.lineno))
+
+
+# ---------------------------------------------------------------------
+# R002: host sync inside superstep loops
+# ---------------------------------------------------------------------
+
+def _is_dispatch_name(name: str) -> bool:
+    return ("step" in name or "chunk" in name or name.startswith("_bfs"))
+
+
+def _rule_r002(tree: ast.Module, rel: str,
+               lines: Sequence[str]) -> Iterable[Finding]:
+    hint = ("move the sync out of the loop (or into the loop *test*, the "
+            "designed once-per-iteration sync point); keep intermediate "
+            "values on device")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.While):
+            continue
+        body_calls = [c for stmt in node.body for c in ast.walk(stmt)
+                      if isinstance(c, ast.Call)]
+        if not any(_is_dispatch_name(_call_name(c.func)) for c in body_calls):
+            continue
+        for call in body_calls:
+            name = _call_name(call.func)
+            if name == "item" and isinstance(call.func, ast.Attribute):
+                yield Finding(rel, call.lineno, "R002",
+                              ".item() host sync inside a superstep loop",
+                              hint, _snippet(lines, call.lineno))
+            elif name in _HOST_SYNC_NP_FUNCS and \
+                    isinstance(call.func, ast.Attribute) and \
+                    isinstance(call.func.value, ast.Name) and \
+                    call.func.value.id in _NP_MODULE_NAMES:
+                yield Finding(rel, call.lineno, "R002",
+                              f"np.{name}() device->host transfer inside a "
+                              "superstep loop",
+                              hint, _snippet(lines, call.lineno))
+            elif name in {"bool", "int", "float"} and \
+                    isinstance(call.func, ast.Name) and call.args and \
+                    not isinstance(call.args[0], ast.Constant):
+                yield Finding(rel, call.lineno, "R002",
+                              f"{name}(...) forces a host sync on a device "
+                              "value inside a superstep loop",
+                              hint, _snippet(lines, call.lineno))
+
+
+# ---------------------------------------------------------------------
+# R003: kernel parity completeness (repo-level, not per-file)
+# ---------------------------------------------------------------------
+
+def _pallas_kernel_names(kernels_init: Path) -> Tuple[int, List[str]]:
+    """(lineno, names) of the PALLAS_KERNELS literal; (0, []) if absent."""
+    tree = ast.parse(kernels_init.read_text())
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == "PALLAS_KERNELS":
+                try:
+                    names = list(ast.literal_eval(node.value))
+                except (ValueError, TypeError):
+                    return node.lineno, []
+                return node.lineno, [str(n) for n in names]
+    return 0, []
+
+
+def _rule_r003(root: Path) -> Iterable[Finding]:
+    kernels_init = root / "src/repro/kernels/__init__.py"
+    ref_py = root / "src/repro/kernels/ref.py"
+    tests_dir = root / "tests"
+    if not kernels_init.exists():
+        return
+    lineno, names = _pallas_kernel_names(kernels_init)
+    if not names:
+        yield Finding("src/repro/kernels/__init__.py", lineno, "R003",
+                      "PALLAS_KERNELS tuple missing or not a literal — the "
+                      "kernel-parity contract has no anchor",
+                      "declare PALLAS_KERNELS = (\"kernel1\", ...) as a "
+                      "plain literal", "PALLAS_KERNELS missing")
+        return
+    ref_defs: Set[str] = set()
+    if ref_py.exists():
+        for node in ast.walk(ast.parse(ref_py.read_text())):
+            if isinstance(node, ast.FunctionDef):
+                ref_defs.add(node.name)
+    test_text = ""
+    if tests_dir.is_dir():
+        test_text = "\n".join(p.read_text()
+                              for p in sorted(tests_dir.glob("*.py")))
+    snippet_lines = kernels_init.read_text().splitlines()
+    snip = _snippet(snippet_lines, lineno)
+    for name in names:
+        oracle = f"{name}_ref"
+        if oracle not in ref_defs:
+            yield Finding("src/repro/kernels/__init__.py", lineno, "R003",
+                          f"kernel '{name}' has no pure-jnp oracle "
+                          f"'{oracle}' in kernels/ref.py",
+                          f"add {oracle}(...) to kernels/ref.py",
+                          f"{snip}::{oracle}:missing-ref")
+        elif oracle not in test_text:
+            yield Finding("src/repro/kernels/__init__.py", lineno, "R003",
+                          f"kernel '{name}' oracle '{oracle}' is never "
+                          "referenced by any test under tests/",
+                          f"add a parity test comparing ops.{name} against "
+                          f"ref.{oracle}",
+                          f"{snip}::{oracle}:missing-test")
+
+
+# ---------------------------------------------------------------------
+# R004: optional-dep imports at module top level
+# ---------------------------------------------------------------------
+
+def _rule_r004(tree: ast.Module, rel: str,
+               lines: Sequence[str]) -> Iterable[Finding]:
+    hint = ("wrap in the repo shim pattern: try/except ImportError with a "
+            "None (or fallback) binding, or import inside the function "
+            "that needs it")
+    for stmt in tree.body:  # module top level only — Try/def bodies exempt
+        modules: List[str] = []
+        if isinstance(stmt, ast.Import):
+            modules = [a.name for a in stmt.names]
+        elif isinstance(stmt, ast.ImportFrom) and stmt.module:
+            modules = [stmt.module]
+        for mod in modules:
+            if mod in _OPTIONAL_MODULES or \
+                    any(mod.startswith(m + ".") for m in _OPTIONAL_MODULES):
+                yield Finding(rel, stmt.lineno, "R004",
+                              f"optional dependency '{mod}' imported "
+                              "unconditionally at module top level",
+                              hint, _snippet(lines, stmt.lineno))
+
+
+# ---------------------------------------------------------------------
+# R005: engine mutations must route through delta.apply_engine_updates
+# ---------------------------------------------------------------------
+
+def _is_overlay_apply(call: ast.Call) -> bool:
+    if not (isinstance(call.func, ast.Attribute) and call.func.attr == "apply"):
+        return False
+    recv = call.func.value
+    if isinstance(recv, ast.Name):
+        return recv.id in _OVERLAY_RECEIVER_NAMES
+    if isinstance(recv, ast.Attribute):
+        return recv.attr == "delta"
+    return False
+
+
+def _rule_r005(tree: ast.Module, rel: str,
+               lines: Sequence[str]) -> Iterable[Finding]:
+    if rel.replace("\\", "/").endswith("core/delta.py"):
+        return  # the router itself owns these internals
+    hint = ("route the mutation through delta.apply_engine_updates(engine, "
+            "add, remove) so epochs bump and caches invalidate")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _call_name(node.func)
+            if name in _OVERLAY_MUTATORS:
+                yield Finding(rel, node.lineno, "R005",
+                              f"direct overlay mutation via {name}() "
+                              "outside core/delta.py",
+                              hint, _snippet(lines, node.lineno))
+            elif _is_overlay_apply(node):
+                yield Finding(rel, node.lineno, "R005",
+                              "direct delta-overlay .apply() outside "
+                              "core/delta.py bypasses epoch/cache "
+                              "invalidation",
+                              hint, _snippet(lines, node.lineno))
+        elif isinstance(node, ast.FunctionDef) and \
+                node.name in {"add_edges", "remove_edges"}:
+            calls = {_call_name(c.func) for stmt in node.body
+                     for c in ast.walk(stmt) if isinstance(c, ast.Call)}
+            if "apply_engine_updates" not in calls:
+                yield Finding(rel, node.lineno, "R005",
+                              f"{node.name}() does not call "
+                              "apply_engine_updates — updates will not "
+                              "invalidate caches",
+                              hint, _snippet(lines, node.lineno))
+
+
+# ---------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------
+
+_PER_FILE_RULES = (_rule_r001, _rule_r002, _rule_r004, _rule_r005)
+
+
+def lint_file(path: Path, rel: str) -> List[Finding]:
+    source = path.read_text()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Finding(rel, exc.lineno or 0, "R000",
+                        f"file does not parse: {exc.msg}", "",
+                        f"syntax-error:{exc.msg}")]
+    _attach_parents(tree)
+    lines = source.splitlines()
+    out: List[Finding] = []
+    for rule in _PER_FILE_RULES:
+        for f in rule(tree, rel, lines):
+            if f.rule in _noqa_rules(lines, f.line):
+                continue
+            out.append(f)
+    return out
+
+
+def run_lint(root: Path, dirs: Optional[Sequence[str]] = None
+             ) -> List[Finding]:
+    """Lint every ``*.py`` under ``dirs`` (repo-relative; defaults to
+    :data:`DEFAULT_LINT_DIRS`), plus the repo-level R003 parity check
+    when the kernels package is in scope."""
+    root = Path(root)
+    if dirs is None:
+        dirs = DEFAULT_LINT_DIRS
+    findings: List[Finding] = []
+    for d in dirs:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            findings.extend(lint_file(path, rel))
+    if any(Path(d).as_posix().rstrip("/").endswith("kernels") or
+           "src/repro" in Path(d).as_posix() for d in dirs):
+        if (root / "src/repro/kernels/__init__.py").exists():
+            findings.extend(_rule_r003(root))
+    return findings

@@ -283,7 +283,7 @@ class DeltaOverlay:
         if tomb:
             V = self.num_nodes
             keys = sarr * V + oarr
-            tkeys = np.fromiter((s * V + o for (s, o) in tomb),
+            tkeys = np.fromiter((s * V + o for (s, o) in sorted(tomb)),
                                 dtype=np.int64, count=len(tomb))
             keep = ~np.isin(keys, tkeys)
             sarr, oarr = sarr[keep], oarr[keep]
@@ -312,8 +312,8 @@ class DeltaOverlay:
         """Packed canonical keys of every tombstoned completed triple —
         for masking the dense engine's base edge rows."""
         P2, V = 2 * self.num_preds, self.num_nodes
-        keys = [(o * P2 + p) * V + s for p in self._tomb
-                for (s, o) in self._tomb[p]]
+        keys = [(o * P2 + p) * V + s for p in sorted(self._tomb)
+                for (s, o) in sorted(self._tomb[p])]
         return np.asarray(keys, dtype=np.int64)
 
     # -- compaction / rebuild ------------------------------------------------

@@ -70,7 +70,7 @@ from . import delta as dl
 from . import planner as qp
 from . import regex as rx
 from .engines import (PlanCache, QueryLike, QueryStats, ResultCache,
-                      as_query, normalized_key,
+                      TraceTracker, as_query, normalized_key,
                       probe_result_cache, publish_result, truncate_result)
 from .glushkov import Glushkov
 from .ring import LabeledGraph
@@ -268,7 +268,10 @@ def _host_stepped(chunk_fn, tables, start_planes, num_nodes, max_steps,
             raise TimeoutError("query deadline exceeded")
         frontier, visited, done = chunk_fn(
             *tables, frontier, visited, num_nodes, _DEADLINE_CHUNK)
-        it += int(done)
+        # the chunk-count sync IS the deadline design: the loop test
+        # already blocks on this chunk's result, so reading `done` adds
+        # no extra device round-trip
+        it += int(done)  # repro: noqa R002 — deadline loop syncs per chunk by design
     return visited, it
 
 
@@ -343,6 +346,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
         self.plans = PlanCache()
         self.decisions = PlanCache()
         self.results = result_cache if result_cache is not None else ResultCache()
+        self.traces = TraceTracker()  # distinct BFS dispatch signatures
         self.hetero_dispatches = 0   # _bfs_hetero device calls
         self.delta: Optional[dl.DeltaOverlay] = None  # live-update overlay
         self.compact_threshold = compact_threshold
@@ -549,6 +553,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
         max_steps = V * (g.m + 1) + 1
         if self.sharded is not None:
             B_host, PRED_host = plan.host_tables()
+            self.traces.record("sharded_rows", 1, g.m + 1)
             visited, it = self.sharded.run_rows(
                 B_host[None], PRED_host[None],
                 self._start_planes(g, objs)[None],
@@ -558,12 +563,14 @@ class DenseRPQ(dl.LiveUpdateEngine):
             self._superstep_acc += it
             return visited[0, :, 0] > 0
         if self._deadline is not None:
+            self.traces.record("bfs_chunk", V, g.m + 1)
             visited, it = _host_stepped(
                 _bfs_chunk, (subj, pred, obj, plan.B, plan.PRED),
                 self._start_planes(g, objs), V, max_steps, self._deadline,
             )
             self._superstep_acc += it
             return np.asarray(visited[:, 0]) > 0
+        self.traces.record("bfs", V, g.m + 1, max_steps)
         visited, _ = _bfs(
             subj, pred, obj, plan.B, plan.PRED,
             jnp.asarray(self._start_planes(g, objs)),
@@ -597,6 +604,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
                 # Bsz), so chunks after the first skip the transfer
                 planes = np.zeros((Bsz, V, S), dtype=np.int8)
                 planes[np.arange(len(chunk)), chunk] = frow
+                self.traces.record("sharded_rows", Bsz, S)
                 visited, it = self.sharded.run_rows(
                     Bstk, PREDstk, planes, V * S + 1,
                     deadline=self._deadline, table_key=(plan, Bsz),
@@ -607,6 +615,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
             planes = np.zeros((len(chunk), V, S), dtype=np.int8)
             planes[np.arange(len(chunk)), chunk] = frow
             if self._deadline is not None:
+                self.traces.record("bfs_chunk_batched", len(chunk), V, S)
                 visited, it = _host_stepped(
                     _bfs_chunk_batched,
                     (subj, pred, obj, plan.B, plan.PRED),
@@ -614,6 +623,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
                 )
                 self._superstep_acc += it
             else:
+                self.traces.record("bfs_batched", len(chunk), V, S)
                 visited = _bfs_batched(
                     subj, pred, obj, plan.B, plan.PRED,
                     jnp.asarray(planes), V, V * S + 1,
@@ -672,12 +682,14 @@ class DenseRPQ(dl.LiveUpdateEngine):
                     PREDstk[r, :S, :S] = PRED_host
                     planes[r, start, :S] = _start_row(plan.g)
                 if self.sharded is not None:
+                    self.traces.record("sharded_rows", Bsz, S_pad)
                     visited, it = self.sharded.run_rows(
                         Bstk, PREDstk, planes, V * S_pad + 1,
                         deadline=self._deadline,
                     )
                     self._superstep_acc += it
                 elif self._deadline is not None:
+                    self.traces.record("bfs_chunk_hetero", Bsz, S_pad)
                     visited, it = _host_stepped(
                         _bfs_chunk_hetero,
                         (subj, pred, obj, jnp.asarray(Bstk),
@@ -686,6 +698,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
                     )
                     self._superstep_acc += it
                 else:
+                    self.traces.record("bfs_hetero", Bsz, S_pad)
                     visited = _bfs_hetero(
                         subj, pred, obj, jnp.asarray(Bstk),
                         jnp.asarray(PREDstk), jnp.asarray(planes),
@@ -782,6 +795,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
         null = rx.nullable(ast)
         out: Set[Tuple[int, int]] = set()
         acc0 = self._superstep_acc
+        tr0 = self.traces.retraces
         plan = self._decide(ast, subject is not None, obj is not None, stats)
 
         if subject is None and obj is None:
@@ -849,6 +863,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
         if stats is not None:
             stats.results = len(out)
             stats.supersteps += self._superstep_acc - acc0
+            stats.retraces += self.traces.retraces - tr0
             stats.epoch = self.epoch
             stats.result_cache_invalidations = self.results.invalidations
             stats.plan_cache_invalidations = self.decisions.invalidations

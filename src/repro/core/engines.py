@@ -137,6 +137,37 @@ class QueryStats:
     plan_est_cost: float = 0.0
     plan_est_frontier: float = 0.0
     plan_actual_frontier: int = 0
+    # compiled-signature churn: how many NEW jit signatures this query
+    # (batch-wide on ``eval_many`` — batches dispatch jointly) forced the
+    # engine to trace.  A steady-state workload should sit at 0; growth
+    # means the padding/bucketing scheme is leaking shapes (the runtime
+    # view of the trace audit's retrace budget — repro.analysis).
+    retraces: int = 0
+
+
+class TraceTracker:
+    """Ledger of distinct compiled-dispatch signatures an engine has
+    induced — the runtime side of the ``repro.analysis`` retrace audit.
+
+    Engines :meth:`record` a key per device dispatch, built from the
+    same quantities their jit signatures key on (shape dims + static
+    args).  A key seen before is a cache hit (no trace); a new key is
+    counted in ``retraces``.  Padding/bucketing schemes (pow2 state
+    buckets, fixed source-batch chunks, pow2 task padding) exist exactly
+    to keep this counter flat under mixed workloads.
+    """
+
+    def __init__(self):
+        self.signatures = set()
+        self.retraces = 0
+
+    def record(self, *key) -> bool:
+        """Record one dispatch signature; True when it forced a new trace."""
+        if key in self.signatures:
+            return False
+        self.signatures.add(key)
+        self.retraces += 1
+        return True
 
 
 def truncate_result(out: Sequence[Tuple[int, int]],

@@ -86,7 +86,7 @@ from . import delta as dl
 from . import planner as qp
 from . import regex as rx
 from .engines import (PlanBundle, PlanCache, QueryLike, QueryStats,
-                      ResultCache, as_query, normalized_key,
+                      ResultCache, TraceTracker, as_query, normalized_key,
                       probe_result_cache, publish_result, truncate_result)
 from .glushkov import Glushkov
 from .ring import Ring
@@ -208,6 +208,7 @@ class RingRPQ(dl.LiveUpdateEngine):
         self.delta: Optional[dl.DeltaOverlay] = None   # live-update overlay
         self.compact_threshold = compact_threshold
         self.compactions = 0
+        self.traces = TraceTracker()     # distinct kernel dispatch signatures
         self.bundle_kernel_batches = 0   # multi-plan nfa_step dispatches
         self.sharded_kernel_batches = 0  # mesh-sharded nfa_step dispatches
         self._auto_threshold: Optional[float] = None
@@ -315,6 +316,7 @@ class RingRPQ(dl.LiveUpdateEngine):
             result_cache_invalidations=self.results.invalidations,
             plan_cache_invalidations=self.decisions.invalidations,
         ) for _ in qs]
+        tr0 = self.traces.retraces
         deadline = (_time.time() + deadline_s) if deadline_s else None
 
         def on_hit(idx, cached):
@@ -407,6 +409,11 @@ class RingRPQ(dl.LiveUpdateEngine):
             publish_result(self.results, key, out, pending[key], results,
                            footprint=self._footprint(ast), epoch=epoch)
 
+        # batch-wide attribution: the coalesced wavefront dispatches
+        # jointly, so each row reports the batch's new-signature count
+        retr = self.traces.retraces - tr0
+        for st in stats_list:
+            st.retraces = retr
         if stats_out is not None:
             stats_out.extend(stats_list)
         return results
@@ -420,6 +427,7 @@ class RingRPQ(dl.LiveUpdateEngine):
         stats.epoch = self.epoch
         stats.result_cache_invalidations = self.results.invalidations
         stats.plan_cache_invalidations = self.decisions.invalidations
+        tr0 = self.traces.retraces
         V = self.ring.num_nodes
         out: Set[Tuple[int, int]] = set()
         null = rx.nullable(ast)
@@ -508,6 +516,7 @@ class RingRPQ(dl.LiveUpdateEngine):
                 if tgt in found:
                     out.add((subject, obj))
         stats.results = len(out)
+        stats.retraces += self.traces.retraces - tr0
         return truncate_result(out, limit)
 
     # -- internals -------------------------------------------------------------
@@ -753,6 +762,7 @@ class RingRPQ(dl.LiveUpdateEngine):
         pow2-padded so compiled shapes are reused), else single-device."""
         from ..kernels import ops
         if self.mesh is None:
+            self.traces.record("nfa_step", X.shape[0], X.shape[1])
             return np.asarray(ops.nfa_step(X, bwd))
         if self._task_step is None:
             from .distributed import make_task_shard_step
@@ -773,6 +783,7 @@ class RingRPQ(dl.LiveUpdateEngine):
             per *= 2
         Xp = np.zeros((per * n, X.shape[1]), dtype=np.uint32)
         Xp[:N] = X
+        self.traces.record("task_shard_step", per * n, X.shape[1])
         Y = np.asarray(self._task_step(Xp, cached[1]))
         self.sharded_kernel_batches += 1
         return Y[:N]

@@ -51,9 +51,13 @@ def _kernel(S: int, W: int, x_ref, bwd_ref, y_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def nfa_step(X: jnp.ndarray, bwd: jnp.ndarray, interpret: bool = True):
+def nfa_step_pallas(X: jnp.ndarray, bwd: jnp.ndarray, interpret: bool = True):
     """X: [N, W] uint32 masked state words; bwd: [S, W] uint32 packed
-    predecessor masks.  Returns Y: [N, W] uint32 = T'[X]."""
+    predecessor masks.  Returns Y: [N, W] uint32 = T'[X].
+
+    Raw jitted ``pallas_call`` entry point — the public wrapper (which
+    resolves ``interpret`` from the backend) is ``ops.nfa_step``; the
+    ``_pallas`` suffix keeps the two from shadowing each other."""
     N, W = X.shape
     S = bwd.shape[0]
     n_pad = (TILE_N - N % TILE_N) % TILE_N
@@ -80,7 +84,7 @@ def pack_block_diagonal(
     S_total: int,
 ) -> np.ndarray:
     """Pack several automata's predecessor masks into one block-diagonal
-    ``bwd`` operand for :func:`nfa_step`.
+    ``bwd`` operand for :func:`nfa_step_pallas`.
 
     ``pred_masks[i][j]`` is plan i's (Python-int) predecessor mask of
     state j; plan i's block starts at bit ``offsets[i]``.  Returns uint32

@@ -42,11 +42,13 @@ def unpack_bits(packed: np.ndarray, S: int) -> np.ndarray:
 
 def nfa_step(X, bwd):
     """Bit-parallel reverse Glushkov step: Y = T'[X] (packed)."""
-    return _nfa.nfa_step(jnp.asarray(X), jnp.asarray(bwd), interpret=_INTERPRET)
+    return _nfa.nfa_step_pallas(jnp.asarray(X), jnp.asarray(bwd),
+                                interpret=_INTERPRET)
 
 
 def superblock_popcounts(words):
-    return _rank.superblock_popcounts(jnp.asarray(words), interpret=_INTERPRET)
+    return _rank.superblock_popcounts_pallas(jnp.asarray(words),
+                                             interpret=_INTERPRET)
 
 
 def build_rank_directory(words):

@@ -2,7 +2,7 @@
 
 Two pieces (DESIGN.md §2):
 
-  * ``superblock_popcounts`` — index-build kernel: per-512-bit-superblock
+  * ``superblock_popcounts_pallas`` — index-build kernel: per-512-bit-superblock
     population counts over the packed bitvector (the rank directory is
     their prefix sum, done outside — a tiny cumsum).
   * ``rank_window`` — query kernel: given pre-gathered 8-word superblock
@@ -33,7 +33,7 @@ def _sb_kernel(words_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def superblock_popcounts(words: jnp.ndarray, interpret: bool = True):
+def superblock_popcounts_pallas(words: jnp.ndarray, interpret: bool = True):
     """words: [NW] uint32 (NW % SB_WORDS == 0).  Returns [NW/SB_WORDS] int32
     per-superblock popcounts."""
     nsb = words.shape[0] // SB_WORDS

@@ -30,6 +30,28 @@ def rank_window_ref(windows, masks, bases) -> jnp.ndarray:
     return bases + pc.sum(axis=1)
 
 
+def rank1_ref(words: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end rank1 oracle: popcount of bits [0, i) over the packed
+    bitvector, straight from a global prefix sum — no superblock
+    directory, no window gather, so it cross-checks the whole
+    ``ops.build_rank_directory`` + ``ops.rank1`` pipeline at once.
+    words: [NW] uint32; i: [Q] int32 bit offsets.  Returns [Q] int32."""
+    i = jnp.asarray(i, dtype=jnp.int32)
+    pc = jax.lax.population_count(words).astype(jnp.int32)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(pc)])
+    wq = i >> 5
+    inword = (i & 31).astype(jnp.uint32)
+    partial_mask = jnp.where(
+        inword == 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> (jnp.uint32(32) - inword),
+    )
+    partial = jax.lax.population_count(
+        words[jnp.clip(wq, 0, words.shape[0] - 1)] & partial_mask
+    ).astype(jnp.int32)
+    return cum[wq] + partial
+
+
 def segmented_or_scan_ref(vals: jnp.ndarray, flags: jnp.ndarray) -> jnp.ndarray:
     """Inclusive segmented OR-scan via lax.associative_scan (global — no
     tile boundaries, so it doubles as the oracle for the stitched op)."""

@@ -1,0 +1,409 @@
+"""Tests for the static invariant analyzer (``repro.analysis``).
+
+Per-rule positive/negative fixtures for the AST lint layer, jaxpr-audit
+unit tests against hand-built good/bad step functions, the baseline and
+noqa mechanics, and the repo-is-clean regression gate (the acceptance
+criterion: the shipped tree passes, a deliberately introduced violation
+fails with a file:line finding)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import trace_audit as ta
+from repro.analysis.findings import (Finding, filter_new, load_baseline,
+                                     write_baseline)
+from repro.analysis.lint import lint_file, run_lint
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _lint_source(tmp_path: Path, source: str, rel: str = "pkg/mod.py"):
+    path = tmp_path / "mod.py"
+    path.write_text(textwrap.dedent(source))
+    return lint_file(path, rel)
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------
+# R001: nondeterministic set iteration
+# ---------------------------------------------------------------------
+
+def test_r001_flags_order_sensitive_set_iteration(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        import numpy as np
+
+        class Overlay:
+            def __init__(self):
+                self.tomb = set()
+                self.by_pred = {}
+
+            def bad_rows(self):
+                rows = []
+                for t in self.tomb:          # flagged: for-append over set
+                    rows.append(t)
+                return rows
+
+        def bad_comp():
+            s = {3, 1, 2}
+            return [x + 1 for x in s]        # flagged: list from set
+
+        def bad_fromiter(s):
+            keys = set(s)
+            return np.fromiter((k for k in keys), dtype=np.int64)
+        """)
+    assert _rules(fs) == ["R001", "R001", "R001"]
+    assert all("hash" in f.message or "order" in f.message for f in fs)
+    assert all(f.line > 0 and f.hint for f in fs)
+
+
+def test_r001_negatives_sorted_and_dict_iteration(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        import numpy as np
+
+        def ok_sorted(s):
+            items = set(s)
+            a = [x for x in sorted(items)]          # sorted first: ok
+            b = np.fromiter((k for k in sorted(items)), dtype=np.int64)
+            total = sum(x for x in items)           # order-free reduction
+            return a, b, total, len(items)
+
+        def ok_dict(d):
+            # dict iteration is insertion-ordered — deterministic
+            return [v for v in d], [d[k] for k in d]
+
+        def ok_set_result(s):
+            # building a SET from a set is order-free
+            return {x + 1 for x in s}
+        """)
+    assert fs == []
+
+
+def test_r001_dict_of_set_attribute(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        from typing import Dict, Set, Tuple
+
+        class Overlay:
+            def __init__(self):
+                self._tomb: Dict[int, Set[Tuple[int, int]]] = {}
+
+            def bad(self, p):
+                return [e for e in self._tomb.get(p, set())]
+
+            def good(self, p):
+                return sorted(self._tomb.get(p, set()))
+        """)
+    assert _rules(fs) == ["R001"]
+    assert fs[0].line == 8
+
+
+# ---------------------------------------------------------------------
+# R002: host sync inside superstep loops
+# ---------------------------------------------------------------------
+
+def test_r002_flags_host_sync_in_superstep_loop(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        import numpy as np
+
+        def drive(step, frontier):
+            it = 0
+            while it < 64:
+                frontier = step(frontier)
+                alive = int(frontier.sum())      # flagged
+                host = np.asarray(frontier)      # flagged
+                it += 1
+            return frontier
+        """)
+    assert _rules(fs) == ["R002", "R002"]
+    assert {f.line for f in fs} == {7, 8}
+
+
+def test_r002_loop_test_and_nondispatch_loops_exempt(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        import numpy as np
+
+        def drive(step, frontier, max_steps):
+            it = 0
+            # the convergence check in the loop TEST is the designed sync
+            while it < max_steps and bool((frontier > 0).any()):
+                frontier = step(frontier)
+                it += 1
+            return frontier
+
+        def host_only(values):
+            # no step/chunk dispatch in the body: plain host loop, exempt
+            total = 0
+            while values:
+                total += int(values.pop())
+            return total
+        """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------
+# R003: kernel parity completeness (repo-level)
+# ---------------------------------------------------------------------
+
+def _make_kernel_tree(root: Path, ref_body: str, test_body: str):
+    k = root / "src/repro/kernels"
+    k.mkdir(parents=True)
+    (k / "__init__.py").write_text(
+        'PALLAS_KERNELS = ("foo",)\n')
+    (k / "ref.py").write_text(textwrap.dedent(ref_body))
+    t = root / "tests"
+    t.mkdir()
+    (t / "test_k.py").write_text(textwrap.dedent(test_body))
+
+
+def test_r003_missing_ref_then_missing_test_then_clean(tmp_path):
+    _make_kernel_tree(tmp_path, "", "")
+    fs = run_lint(tmp_path, dirs=["src/repro/kernels"])
+    assert _rules(fs) == ["R003"]
+    assert "no pure-jnp oracle" in fs[0].message
+
+    (tmp_path / "src/repro/kernels/ref.py").write_text(
+        "def foo_ref(x):\n    return x\n")
+    fs = run_lint(tmp_path, dirs=["src/repro/kernels"])
+    assert _rules(fs) == ["R003"]
+    assert "never referenced by any test" in fs[0].message
+
+    (tmp_path / "tests/test_k.py").write_text(
+        "def test_foo():\n    from ref import foo_ref\n")
+    assert run_lint(tmp_path, dirs=["src/repro/kernels"]) == []
+
+
+# ---------------------------------------------------------------------
+# R004: optional-dep imports
+# ---------------------------------------------------------------------
+
+def test_r004_top_level_vs_shim(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        import hypothesis
+        from jax.experimental.shard_map import shard_map
+        """)
+    assert _rules(fs) == ["R004", "R004"]
+
+    fs = _lint_source(tmp_path, """\
+        try:
+            import zstandard
+        except ImportError:
+            zstandard = None
+
+        def _resolve():
+            from jax.experimental.shard_map import shard_map
+            return shard_map
+        """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------
+# R005: engine mutations must route through the delta overlay
+# ---------------------------------------------------------------------
+
+def test_r005_overlay_bypass(tmp_path):
+    fs = _lint_source(tmp_path, """\
+        def add_edges(engine, edges):
+            engine.delta.apply(edges, [])    # flagged twice: .apply +
+                                             # add_edges w/o router
+
+        def sneak(ov):
+            ov._insert_tomb(0, 1, 2)         # flagged
+        """)
+    assert _rules(fs) == ["R005", "R005", "R005"]
+
+
+def test_r005_router_and_delta_module_exempt(tmp_path):
+    ok = """\
+        from .delta import apply_engine_updates
+
+        def add_edges(engine, edges):
+            apply_engine_updates(engine, edges, [])
+        """
+    assert _lint_source(tmp_path, ok) == []
+    # the overlay module itself owns its internals
+    bad_but_exempt = """\
+        def _fold(ov):
+            ov._insert_tomb(0, 1, 2)
+        """
+    assert _lint_source(tmp_path, bad_but_exempt,
+                        rel="src/repro/core/delta.py") == []
+
+
+# ---------------------------------------------------------------------
+# noqa + baseline mechanics
+# ---------------------------------------------------------------------
+
+def test_noqa_suppresses_only_named_rule(tmp_path):
+    src = """\
+        def drive(step, x):
+            while True:
+                x = step(x)
+                v = int(x)  # repro: noqa R002 — deadline sync by design
+                w = int(x)  # repro: noqa R001 — wrong rule id
+                if v + w:
+                    break
+            return x
+        """
+    fs = _lint_source(tmp_path, src)
+    assert _rules(fs) == ["R002"]
+    assert fs[0].line == 5
+
+
+def test_baseline_roundtrip_and_fingerprint_stability(tmp_path):
+    old = Finding("a.py", 10, "R001", "msg", "hint", "for t in tomb:")
+    drifted = Finding("a.py", 42, "R001", "msg", "hint", "for t in tomb:")
+    fresh = Finding("a.py", 11, "R002", "msg2", "hint", "int(x)")
+    path = tmp_path / "baseline.json"
+    write_baseline(path, [old])
+    baseline = load_baseline(path)
+    # line drift does not un-baseline a finding; new findings survive
+    assert filter_new([drifted, fresh], baseline) == [fresh]
+    doc = json.loads(path.read_text())
+    assert doc["findings"][0]["justification"]
+    assert load_baseline(tmp_path / "absent.json") == set()
+
+
+# ---------------------------------------------------------------------
+# trace audit: audit_jaxpr on hand-built step functions
+# ---------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_audit_jaxpr_clean_step():
+    def good_step(x, bwd):
+        return x | bwd[0]
+
+    fs = ta.audit_jaxpr(
+        good_step, (_sds((8, 2), jnp.uint32), _sds((4, 2), jnp.uint32)),
+        label="good", file="x.py", expect_out_dtypes=[jnp.uint32])
+    assert fs == []
+
+
+def test_audit_jaxpr_catches_dtype_break():
+    def signed_step(x):
+        return x.astype(jnp.int32) + 1       # packed words went signed
+
+    fs = ta.audit_jaxpr(
+        signed_step, (_sds((8, 2), jnp.uint32),),
+        label="bad", file="x.py", expect_out_dtypes=[jnp.uint32])
+    assert _rules(fs) == ["T001"]
+    assert "int32" in fs[0].message
+
+
+def test_audit_jaxpr_catches_host_callback():
+    def chatty_step(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x, vmap_method="sequential")
+
+    fs = ta.audit_jaxpr(
+        chatty_step, (_sds((8,), jnp.uint32),),
+        label="chatty", file="x.py")
+    assert "T002" in _rules(fs)
+    assert "callback" in fs[0].message
+
+
+def test_audit_jaxpr_reports_lowering_failure_as_finding():
+    def broken(x):
+        raise ValueError("no lowering for you")
+
+    fs = ta.audit_jaxpr(broken, (_sds((8,), jnp.uint32),),
+                        label="broken", file="x.py")
+    assert _rules(fs) == ["T006"]
+
+
+# ---------------------------------------------------------------------
+# trace audit: repo checks fire when invariants are deliberately broken
+# ---------------------------------------------------------------------
+
+def test_pow2_check_clean_and_catches_regression(monkeypatch):
+    from repro.core.dense import DenseRPQ
+
+    assert ta.check_pow2_padding() == []
+    monkeypatch.setattr(DenseRPQ, "_pad_width",
+                        staticmethod(lambda S: max(S, 4)))
+    broken = ta.check_pow2_padding()
+    assert broken and all(f.rule == "T003" for f in broken)
+
+
+def test_retrace_check_clean_and_budget_fires(monkeypatch):
+    assert ta.check_retraces() == []
+    monkeypatch.setitem(ta.RETRACE_BUDGET, "dense", 0)
+    fs = ta.check_retraces()
+    assert any(f.rule == "T004" and "dense" in f.message for f in fs)
+
+
+def test_kernel_contracts_and_sharded_steps_clean():
+    assert ta.check_kernel_contracts() == []
+    assert ta.check_hetero_bfs() == []
+    assert ta.check_sharded_steps() == []
+
+
+# ---------------------------------------------------------------------
+# the gate itself
+# ---------------------------------------------------------------------
+
+def test_repo_is_clean_under_lint_gate():
+    """Regression: the shipped tree passes the lint layer against the
+    checked-in baseline (new findings must be fixed or justified)."""
+    findings = run_lint(REPO_ROOT)
+    baseline = load_baseline(
+        REPO_ROOT / "src/repro/analysis/baseline.json")
+    new = filter_new(findings, baseline)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def test_cli_exit_codes_and_json_report(tmp_path):
+    """python -m repro.analysis --lint exits 0 on the repo and 1 on a
+    tree with a deliberately introduced violation, with a file:line
+    finding in the JSON report."""
+    env = {**os.environ, "PYTHONPATH": str(REPO_ROOT / "src")}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint",
+         "--root", str(REPO_ROOT)],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK: no new findings" in r.stdout
+
+    bad_root = tmp_path / "badrepo"
+    (bad_root / "src/repro/core").mkdir(parents=True)
+    (bad_root / "src/repro/core/rogue.py").write_text(textwrap.dedent("""\
+        def collect(tomb):
+            return [t for t in set(tomb)]
+        """))
+    report = tmp_path / "report.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint",
+         "--root", str(bad_root), "--json", str(report)],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "src/repro/core/rogue.py:2" in r.stdout
+    doc = json.loads(report.read_text())
+    assert doc["new"][0]["rule"] == "R001"
+    assert doc["new"][0]["line"] == 2
+
+
+def test_trace_audit_multidevice_subprocess():
+    """The full trace audit (including the T005 collective-bytes check
+    against the planner wire model) on a forced 8-device host mesh."""
+    env = {**os.environ, "PYTHONPATH": str(REPO_ROOT / "src")}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--trace",
+         "--force-host-devices", "8", "--root", str(REPO_ROOT)],
+        capture_output=True, text=True, timeout=540, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "T005 OK" in r.stdout
+    assert "8 cpu device(s)" in r.stdout

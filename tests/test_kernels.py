@@ -60,6 +60,23 @@ def test_rank_kernel(n_bits):
     np.testing.assert_array_equal(got, exp)
 
 
+@pytest.mark.parametrize("n_bits", [100, 515, 8192])
+def test_rank1_matches_ref(n_bits):
+    """Kernel-pipeline rank1 (directory + window gather + rank_window)
+    vs the end-to-end pure-jnp oracle ref.rank1_ref."""
+    bits = RNG.random(n_bits) < 0.3
+    nw = ((n_bits + 511) // 512) * 16 + 16
+    padded = np.zeros(nw * 32, dtype=bool)
+    padded[:n_bits] = bits
+    words = np.packbits(padded.reshape(nw, 32), axis=1,
+                        bitorder="little").view(np.uint32).ravel()
+    q = RNG.integers(0, n_bits + 1, 300).astype(np.int32)
+    directory = ops.build_rank_directory(jnp.asarray(words))
+    got = np.asarray(ops.rank1(jnp.asarray(words), directory, q))
+    exp = np.asarray(ref.rank1_ref(jnp.asarray(words), jnp.asarray(q)))
+    np.testing.assert_array_equal(got, exp)
+
+
 @pytest.mark.parametrize("E,W,V", [(1, 1, 1), (10, 1, 4), (3000, 2, 50),
                                    (2050, 1, 2000), (1024, 3, 7)])
 def test_segment_or_shapes(E, W, V):
