@@ -1,0 +1,175 @@
+"""Perf-regression gate: compare a fresh benchmark JSON against the
+previous main-branch run and fail on >threshold regressions.
+
+    # explicit baseline file
+    PYTHONPATH=src python -m benchmarks.compare \\
+        --current BENCH_smoke.json --previous prev.json [--threshold 0.25]
+
+    # CI: download the newest main-branch BENCH_smoke artifact via the
+    # GitHub Actions artifacts API (needs GITHUB_TOKEN + GITHUB_REPOSITORY)
+    PYTHONPATH=src python -m benchmarks.compare \\
+        --current BENCH_smoke.json --fetch-previous
+
+Direction-aware per row key (the ``rows`` dict of the JSON document
+``benchmarks/run.py`` / ``benchmarks/serving.py`` emit):
+
+  * latency rows — key ends in ``_us`` / ``_ms`` / ``_s`` — regress when
+    ``current > previous * (1 + threshold)``;
+  * ``speedup`` / throughput-flavoured rows (``speedup`` in the key)
+    regress when ``current < previous * (1 - threshold)``;
+  * anything else (counts, ratios, roofline terms) is informational and
+    never gates.
+
+Only rows present in BOTH documents are compared — new benchmarks land
+without a baseline and start gating on the next commit.  A missing or
+unfetchable previous document is a *skip with notice*, exit 0: the gate
+must not brick CI on the first run, on artifact expiry, or on a fork
+without artifact access.
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import os
+import sys
+import urllib.error
+import urllib.request
+import zipfile
+from typing import Dict, List, Optional, Tuple
+
+_LATENCY_SUFFIXES = ("_us", "_ms", "_s", "_seconds")
+
+
+def classify(key: str) -> Optional[str]:
+    """'latency' (lower is better), 'speedup' (higher is better), or
+    None (informational, never gates)."""
+    if "speedup" in key:
+        return "speedup"
+    if key.endswith(_LATENCY_SUFFIXES) and "/_suite_" not in key:
+        return "latency"
+    return None
+
+
+def compare_rows(prev_rows: Dict[str, float], cur_rows: Dict[str, float],
+                 threshold: float = 0.25) -> List[Tuple[str, float, float,
+                                                        float]]:
+    """Regressions as (key, previous, current, ratio) rows; empty list
+    means the gate passes.  ``ratio`` > 1 always reads "this much
+    worse"."""
+    out = []
+    for key in sorted(set(prev_rows) & set(cur_rows)):
+        kind = classify(key)
+        if kind is None:
+            continue
+        prev, cur = float(prev_rows[key]), float(cur_rows[key])
+        if prev <= 0:
+            continue            # degenerate baseline, nothing to gate on
+        if kind == "latency" and cur > prev * (1.0 + threshold):
+            out.append((key, prev, cur, cur / prev))
+        elif kind == "speedup" and cur < prev * (1.0 - threshold):
+            out.append((key, prev, cur, prev / max(cur, 1e-12)))
+    return out
+
+
+def _api(url: str, token: str) -> bytes:
+    req = urllib.request.Request(url, headers={
+        "Authorization": f"Bearer {token}",
+        "Accept": "application/vnd.github+json",
+        "X-GitHub-Api-Version": "2022-11-28",
+    })
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        return resp.read()
+
+
+def fetch_previous(artifact_name: str, branch: str = "main") -> Optional[dict]:
+    """Newest non-expired ``artifact_name`` from a ``branch`` workflow
+    run, via the Actions artifacts API; None (with a notice on stderr)
+    when anything is missing — token, repo, artifact, network."""
+    token = os.environ.get("GITHUB_TOKEN", "")
+    repo = os.environ.get("GITHUB_REPOSITORY", "")
+    if not token or not repo:
+        print("compare: no GITHUB_TOKEN/GITHUB_REPOSITORY — cannot fetch "
+              "a previous artifact", file=sys.stderr)
+        return None
+    base = os.environ.get("GITHUB_API_URL", "https://api.github.com")
+    try:
+        listing = json.loads(_api(
+            f"{base}/repos/{repo}/actions/artifacts"
+            f"?name={artifact_name}&per_page=50", token))
+        candidates = [
+            a for a in listing.get("artifacts", [])
+            if not a.get("expired")
+            and (a.get("workflow_run") or {}).get("head_branch") == branch]
+        if not candidates:
+            print(f"compare: no prior '{artifact_name}' artifact on "
+                  f"branch '{branch}'", file=sys.stderr)
+            return None
+        newest = max(candidates, key=lambda a: a.get("created_at", ""))
+        blob = _api(newest["archive_download_url"], token)
+        with zipfile.ZipFile(io.BytesIO(blob)) as zf:
+            for name in zf.namelist():
+                if name.endswith(".json"):
+                    return json.loads(zf.read(name))
+        print(f"compare: artifact '{artifact_name}' holds no JSON",
+              file=sys.stderr)
+        return None
+    except (urllib.error.URLError, OSError, ValueError, KeyError) as e:
+        print(f"compare: fetching previous artifact failed: {e}",
+              file=sys.stderr)
+        return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True, metavar="PATH",
+                    help="benchmark JSON from this run")
+    ap.add_argument("--previous", default=None, metavar="PATH",
+                    help="baseline benchmark JSON")
+    ap.add_argument("--fetch-previous", action="store_true",
+                    help="download the baseline from the newest main-branch "
+                         "artifact (GITHUB_TOKEN + GITHUB_REPOSITORY)")
+    ap.add_argument("--artifact-name", default="BENCH_smoke",
+                    help="artifact to fetch (default: BENCH_smoke)")
+    ap.add_argument("--branch", default="main",
+                    help="baseline branch (default: main)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional regression tolerance (default 0.25)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    prev = None
+    if args.previous:
+        try:
+            with open(args.previous) as f:
+                prev = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"compare: cannot read {args.previous}: {e}",
+                  file=sys.stderr)
+    elif args.fetch_previous:
+        prev = fetch_previous(args.artifact_name, branch=args.branch)
+    if prev is None:
+        print("compare: SKIPPED — no previous benchmark document; "
+              "gate passes vacuously")
+        return 0
+
+    shared = set(prev.get("rows", {})) & set(cur.get("rows", {}))
+    gated = [k for k in shared if classify(k)]
+    regressions = compare_rows(prev.get("rows", {}), cur.get("rows", {}),
+                               threshold=args.threshold)
+    print(f"compare: {len(shared)} shared rows, {len(gated)} gated, "
+          f"threshold {args.threshold:.0%}")
+    if not regressions:
+        print("compare: OK — no gated row regressed")
+        return 0
+    width = max(len(k) for k, *_ in regressions)
+    print(f"compare: {len(regressions)} regression(s):")
+    for key, p, c, ratio in regressions:
+        print(f"  {key:<{width}}  {p:12.2f} -> {c:12.2f}   "
+              f"{ratio:5.2f}x worse")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

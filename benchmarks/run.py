@@ -57,6 +57,8 @@ SUITES = {
                                   fromlist=["run"]).run(),
     "updates": lambda: __import__("benchmarks.updates",
                                   fromlist=["run"]).run(),
+    "serving": lambda: __import__("benchmarks.serving",
+                                  fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -1,0 +1,226 @@
+"""Open-loop serving benchmark: continuous-batching slots vs bucket
+flushing, under Poisson arrivals at a fixed offered QPS.
+
+    PYTHONPATH=src python -m benchmarks.serving [--smoke] [--json PATH]
+
+The experiment the slot scheduler exists for: requests arrive on an
+*open-loop* Poisson process (arrival times are drawn up front and do not
+wait for the server — the honest way to measure tail latency, since a
+closed loop self-throttles exactly when the server is slow), mixing
+cheap single-label probes with expensive closure queries.  Two servers
+answer the identical trace on identically-fresh engines:
+
+  * ``bucket`` — the pre-scheduler baseline: admit into a bucket,
+    flush through ``eval_many`` at ``max_batch`` requests or
+    ``max_wait_ms``, every request in a bucket waits for the whole
+    batch (head-of-line blocking behind the slowest automaton);
+  * ``slot`` — :class:`repro.core.scheduler.SlotScheduler`: requests
+    join the in-flight wavefront between supersteps and retire the
+    superstep they converge, so a cheap probe admitted next to a
+    monster closure finishes in milliseconds regardless.
+
+Rows (latency in ms — lower is better; ``p99_speedup`` = bucket p99 /
+slot p99, higher is better):
+
+    serving/<engine>/qps<q>/slot_p50_ms
+    serving/<engine>/qps<q>/slot_p99_ms
+    serving/<engine>/qps<q>/bucket_p50_ms
+    serving/<engine>/qps<q>/bucket_p99_ms
+    serving/<engine>/qps<q>/p99_speedup
+
+``--smoke`` / BENCH_SMOKE=1 shrinks the fixture and trace for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                       # direct-script run
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+
+def _workload(g, n, rng):
+    """``n`` queries, ~1-in-4 expensive: closure expressions over the
+    hub predicates reach a large fraction of a scale-free graph, single
+    labels touch a handful of nodes — the mix where head-of-line
+    blocking hurts."""
+    from repro.core.engines import Query
+    cheap = ["4", "5/6", "^2", "7"]
+    heavy = ["(0|1)+", "0/(1|2)*", "(0|1|2)+"]
+    out = []
+    for i in range(n):
+        exprs = heavy if rng.random() < 0.25 else cheap
+        expr = exprs[int(rng.integers(0, len(exprs)))]
+        out.append(Query(expr, obj=int(rng.integers(0, g.num_nodes))))
+    return out
+
+
+def _arrivals(n, qps, rng):
+    """Open-loop Poisson offsets (seconds from trace start), as plain
+    floats so the serving loops do no conversions."""
+    gaps = rng.exponential(1.0 / qps, size=n)
+    t = np.cumsum(gaps) - gaps[0]
+    return [float(x) for x in t]
+
+
+def _run_slot(eng, queries, arrivals, max_slots=8):
+    """Serve the trace through the slot scheduler; per-request latency =
+    ticket completion - scheduled arrival (includes queueing)."""
+    from repro.core.scheduler import SlotScheduler
+    sched = SlotScheduler(eng, max_slots=max_slots,
+                          max_queue=len(queries) + 1)
+    n = len(queries)
+    tickets = [None] * n
+    lat = [0.0] * n
+    i = 0
+    t0 = time.monotonic()
+    while i < n or sched.pending():
+        now = time.monotonic() - t0
+        while i < n and arrivals[i] <= now:
+            tickets[i] = sched.submit(queries[i])
+            i += 1
+        progressed = sched.step()
+        if not progressed and i < n:
+            # idle server, next arrival in the future: sleep up to it
+            time.sleep(max(0.0, arrivals[i] - (time.monotonic() - t0)))
+    for j in range(n):
+        lat[j] = tickets[j].finished_at - t0 - arrivals[j]
+    return lat
+
+
+def _run_bucket(eng, queries, arrivals, max_batch=32, max_wait_s=0.004):
+    """The pre-scheduler baseline: flush a bucket through ``eval_many``
+    at ``max_batch`` or ``max_wait_s``; every request's latency runs to
+    its *bucket's* completion."""
+    n = len(queries)
+    lat = [0.0] * n
+    i = 0
+    bucket = []          # indices
+    bucket_t0 = None     # arrival of the oldest queued request
+    t0 = time.monotonic()
+    while i < n or bucket:
+        now = time.monotonic() - t0
+        while i < n and arrivals[i] <= now:
+            if not bucket:
+                bucket_t0 = arrivals[i]
+            bucket.append(i)
+            i += 1
+        flush = len(bucket) >= max_batch or \
+            (bucket and now - bucket_t0 >= max_wait_s) or \
+            (bucket and i >= n)
+        if flush:
+            batch, bucket = bucket, []
+            eng.eval_many([queries[j] for j in batch])
+            done = time.monotonic() - t0
+            for j in batch:
+                lat[j] = done - arrivals[j]
+        elif i < n:
+            wait = arrivals[i] - (time.monotonic() - t0)
+            if bucket_t0 is not None and bucket:
+                wait = min(wait, bucket_t0 + max_wait_s
+                           - (time.monotonic() - t0))
+            time.sleep(max(0.0, wait))
+    return lat
+
+
+def _pct(lat, q):
+    return sorted(lat)[min(len(lat) - 1, int(q * len(lat)))]
+
+
+# per-engine scale: offered QPS must sit below the engine's service
+# capacity (an open-loop trace above capacity measures queue drain, not
+# scheduling) — the ring's host-side bit-parallel traversal serves ~2
+# q/s on this mix, the dense engine's compiled BFS >100 q/s
+_FULL = {
+    "dense": dict(V=3_000, E=24_000, n=120, qps=(50, 200)),
+    "ring": dict(V=800, E=6_400, n=40, qps=(2,)),
+}
+_SMOKE = {
+    "dense": dict(V=500, E=4_000, n=24, qps=(100,)),
+}
+
+
+def run():
+    from repro.core.engines import make_engine
+    from repro.core.fixtures import scale_free_graph
+
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    configs = _SMOKE if smoke else _FULL
+    rows = []
+    for kind, cfg in configs.items():
+        n = cfg["n"]
+        g = scale_free_graph(cfg["V"], 8, cfg["E"], seed=23)
+        queries = _workload(g, n, np.random.default_rng(3))
+        for qps in cfg["qps"]:
+            arrivals = _arrivals(n, qps, np.random.default_rng(17))
+            per_mode = {}
+            for mode, runner in (("slot", _run_slot),
+                                 ("bucket", _run_bucket)):
+                # fresh engine per mode: identical compile/cache state,
+                # and no cross-mode result-cache pollution.  Warm through
+                # the runner as a burst (the batched BFS compiles per
+                # (rows, S_pad, steps) shape, and each mode dispatches
+                # its own shapes), then sweep small pow2 batch sizes —
+                # timed bucket boundaries jitter with the clock, and an
+                # unseen batch shape mid-run would bill one compile to
+                # one request.
+                eng = make_engine(g, kind)
+                runner(eng, queries, [0.0] * n)
+                k = 1
+                while k <= min(32, n):
+                    eng.results.clear()
+                    eng.eval_many(queries[:k])
+                    k *= 2
+                eng.results.clear()
+                per_mode[mode] = runner(eng, queries, arrivals)
+            tag = f"serving/{kind}/qps{qps}"
+            for mode, lat in per_mode.items():
+                rows.append((f"{tag}/{mode}_p50_ms", _pct(lat, 0.50) * 1e3))
+                rows.append((f"{tag}/{mode}_p99_ms", _pct(lat, 0.99) * 1e3))
+            rows.append((f"{tag}/p99_speedup",
+                         _pct(per_mode["bucket"], 0.99)
+                         / max(_pct(per_mode["slot"], 0.99), 1e-9)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixture/trace (sets BENCH_SMOKE=1)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write rows as a JSON document (the shape "
+                         "benchmarks/run.py emits, for benchmarks/compare.py)")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
+    doc = {"smoke": bool(args.smoke), "suites": {}, "rows": {}}
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    try:
+        rows = run()
+    except Exception as e:   # mirror benchmarks.run: fail loud, emit doc
+        print(f"serving/ERROR,,{type(e).__name__}:{e}")
+        doc["suites"]["serving"] = {"error": f"{type(e).__name__}:{e}"}
+        rows = []
+    for key, val in rows:
+        doc["rows"][key] = float(val)
+        print(f"{key},,{val}")
+    if rows:
+        doc["suites"]["serving"] = {"seconds": round(time.time() - t0, 2)}
+        print(f"serving/_suite_seconds,,{time.time() - t0:.1f}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,34 +1,34 @@
-"""Batched RPQ serving: async admission -> heterogeneous eval_many,
+"""Continuous-batching RPQ serving: slot scheduler + async streaming,
 with live graph updates interleaved into the same stream.
 
     PYTHONPATH=src python examples/serve_rpq.py
     # mesh-sharded: partition the batched BFS over 4 forced host devices
     PYTHONPATH=src python examples/serve_rpq.py --force-host-devices 4 --shards 4
 
-The full serving stack the engines are built for:
+The full serving stack the engines are built for — since the slot
+scheduler landed, this is *continuous* batching, not bucket flushing:
 
-  * requests arrive one at a time on an asyncio loop and are *admitted*
-    into a bucket (:class:`AdmissionController`) that flushes when it
-    reaches ``max_batch`` requests or the oldest waiter has been queued
-    for ``max_wait_ms`` — the usual latency/throughput knob of a batched
-    decode server;
-  * a flushed bucket goes through ``eval_many``, which coalesces the
-    bucket into padded batched BFS dispatches even when the requests mix
-    *different* expressions (heterogeneous plan bundles), shares compiled
-    plans via the plan cache, and remembers finished answers in the
-    cross-request result cache;
+  * requests arrive one at a time on an asyncio loop and join the
+    in-flight wavefront **between supersteps** — a pool of ``max_slots``
+    fixed-capacity slots (:class:`repro.core.scheduler.SlotScheduler`),
+    so a new request never waits for the current batch to drain, and a
+    finished request frees its slot the superstep it converges (no
+    head-of-line blocking behind a slow automaton);
+  * every occupied slot advances in the SAME batched dispatch per
+    superstep (heterogeneous plan bundles, pow2 slot-bucket padding
+    keeps compiled signatures bounded under churn), and each slot
+    *streams* newly-discovered result pairs back through an async
+    iterator while its BFS is still running;
   * a replayed request never reaches the BFS at all — it is answered
     straight from the result cache;
-  * **graph mutations** (``submit_update``) ride the same admission
-    stream with *snapshot isolation per bucket flush*: updates queued
-    ahead of a bucket are applied — one epoch bump, footprint-precise
-    cache invalidation — before the bucket evaluates, so every query in
-    a bucket sees one consistent epoch and no query ever sees a
-    half-applied batch.
+  * **graph mutations** (``submit_update``) ride the same stream with
+    *snapshot isolation per query*: the live overlay is swapped for a
+    copy-on-write clone before the mutation applies, so in-flight slots
+    keep reading their admission epoch — writes never stall reads, and
+    every ticket records the epoch its answer is exact at.
 """
 import argparse
 import asyncio
-import os
 import sys
 import time
 
@@ -41,118 +41,39 @@ _ap.add_argument("--shards", type=int, default=None,
 _ap.add_argument("--force-host-devices", type=int, default=None,
                  help="force N virtual CPU devices (must be set before "
                       "jax imports, hence an argument of this script)")
+_ap.add_argument("--slots", type=int, default=8,
+                 help="in-flight slot pool size")
 ARGS = _ap.parse_args()
 if ARGS.force_host_devices:
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={ARGS.force_host_devices}"
-    ).strip()
+    # per-flag setdefault (repro.launch.env imports no jax): appending to
+    # XLA_FLAGS by hand here used to duplicate the flag on every
+    # invocation that inherited a non-empty XLA_FLAGS
+    from repro.launch.env import force_host_devices
+    force_host_devices(ARGS.force_host_devices)
 
 import numpy as np
 
-from repro.core.engines import Query, eval_many, make_engine
+from repro.core.engines import Query, make_engine
 from repro.core.fixtures import scale_free_graph
+from repro.core.scheduler import AsyncServer, SlotScheduler
 
 
-class AdmissionController:
-    """Time/size-bounded request admission in front of ``eval_many``.
-
-    ``submit`` enqueues a request and resolves when its bucket is
-    dispatched.  A bucket flushes as soon as it holds ``max_batch``
-    requests, or ``max_wait_ms`` after its first request was admitted —
-    whichever comes first — so a burst is served in big coalesced
-    batches while a trickle's *queueing* delay stays bounded.  For
-    single-threaded simplicity this example evaluates the flushed bucket
-    synchronously on the event loop, so end-to-end latency also includes
-    any in-flight bucket's BFS time; a production server would offload
-    ``eval_many`` to an executor (one worker, to keep the engine's
-    caches single-threaded) so admission keeps running during
-    evaluation.
-    """
-
-    def __init__(self, engine, max_batch: int = 32, max_wait_ms: float = 4.0):
-        self.engine = engine
-        self.max_batch = max_batch
-        self.max_wait_s = max_wait_ms / 1e3
-        self._bucket = []          # [(Query, Future)]
-        self._updates = []         # [("add"|"remove", triples)]
-        self._timer = None
-        self.batches_dispatched = 0
-        self.requests_admitted = 0
-        self.updates_admitted = 0
-        self.update_batches_applied = 0
-
-    async def submit(self, query: Query):
-        loop = asyncio.get_running_loop()
-        fut = loop.create_future()
-        self._bucket.append((query, fut))
-        self.requests_admitted += 1
-        if len(self._bucket) >= self.max_batch:
-            self._flush()
-        elif self._timer is None:
-            self._timer = loop.call_later(self.max_wait_s, self._flush)
-        return await fut
-
-    def submit_update(self, add=None, remove=None):
-        """Admit a graph mutation into the stream.  Updates are buffered
-        and applied at the next bucket flush, *before* that bucket
-        evaluates — snapshot isolation: a bucket's queries all run at
-        one epoch, and an update is visible to every query admitted
-        after it resolves (plus any still queued in the same bucket,
-        which evaluates at the newer — never an older — epoch)."""
-        if add:
-            self._updates.append(("add", list(add)))
-        if remove:
-            self._updates.append(("remove", list(remove)))
-        self.updates_admitted += 1
-
-    def _apply_updates(self):
-        if not self._updates:
-            return
-        pending, self._updates = self._updates, []
-        for op, triples in pending:
-            if op == "add":
-                self.engine.add_edges(triples)
-            else:
-                self.engine.remove_edges(triples)
-            self.update_batches_applied += 1
-
-    def _flush(self):
-        if self._timer is not None:
-            self._timer.cancel()
-            self._timer = None
-        self._apply_updates()   # the snapshot boundary: one epoch per bucket
-        if not self._bucket:
-            return
-        batch, self._bucket = self._bucket, []
-        self.batches_dispatched += 1
-        try:
-            answers = eval_many(self.engine, [q for q, _ in batch])
-        except Exception as e:
-            # a poisoned bucket must fail its waiters, not hang them
-            # (call_later would swallow the exception into the loop handler)
-            for _, fut in batch:
-                if not fut.done():
-                    fut.set_exception(e)
-            return
-        for (_, fut), ans in zip(batch, answers):
-            if not fut.done():
-                fut.set_result(ans)
-
-    async def drain(self):
-        """Flush whatever is still queued (end-of-stream)."""
-        self._flush()
-
-
-async def _serve_wave(ctrl: AdmissionController, queries, stagger_s: float):
-    """Submit ``queries`` as a trickle-then-burst arrival pattern."""
+async def _serve_wave(server: AsyncServer, queries, stagger_s: float):
+    """Submit ``queries`` as a trickle-then-burst arrival pattern and
+    await every final answer; returns (answers, per-request latencies)."""
     async def one(i, q):
         await asyncio.sleep((i % 8) * stagger_s)   # 8 staggered arrival slots
-        return await ctrl.submit(q)
+        t0 = time.monotonic()
+        ticket = await server.submit(q)
+        ans = await ticket.result()
+        return ans, time.monotonic() - t0
 
-    answers = await asyncio.gather(*(one(i, q) for i, q in enumerate(queries)))
-    await ctrl.drain()
-    return answers
+    out = await asyncio.gather(*(one(i, q) for i, q in enumerate(queries)))
+    return [a for a, _ in out], [lat for _, lat in out]
+
+
+def _p(lat, q):
+    return sorted(lat)[min(len(lat) - 1, int(q * len(lat)))] * 1e3
 
 
 def main():
@@ -163,47 +84,70 @@ def main():
               f"axes {eng.sharded.data_axes}")
 
     # 96 "requests": 6 expressions of different shapes/sizes x 16 endpoints
-    # -> every admission bucket is a *mixed-automaton* batch
+    # -> the in-flight slot pool is a *mixed-automaton* batch
     rng = np.random.default_rng(0)
     exprs = ["0/1*/2", "(0|3)+", "^1/0*", "4", "(2/5)|(0/1)", "6+/7"]
     queries = [Query(e, obj=int(o))
                for e in exprs
                for o in rng.integers(0, g.num_nodes, 16)]
 
-    # warm up untimed with the real batch shapes: the batched BFS traces
+    # warm up untimed with the real slot shapes: the batched BFS traces
     # per (chunk, S_pad) shape, so a token warm-up would leave compilation
     # in the timed run.  Then clear the result cache so the timed wave
     # measures real evaluation, not replay.
-    eval_many(eng, queries)
+    warm = SlotScheduler(eng, max_slots=ARGS.slots)
+    for q in queries:
+        warm.submit(q)
+    warm.drain()
     eng.results.clear()
     # report deltas over the warm-up's counters, not cumulative totals
     plan_h0, plan_m0 = eng.plans.hits, eng.plans.misses
     hetero0 = eng.hetero_dispatches
 
-    ctrl = AdmissionController(eng, max_batch=32, max_wait_ms=4.0)
+    sched = SlotScheduler(eng, max_slots=ARGS.slots)
     t0 = time.time()
-    answers = asyncio.run(_serve_wave(ctrl, queries, stagger_s=0.002))
+    answers, lat = asyncio.run(_run_wave(sched, queries, stagger_s=0.002))
     dt = time.time() - t0
     print(f"served {len(queries)} RPQ requests ({len(exprs)} mixed exprs) "
-          f"through async admission: {dt*1e3:.1f} ms total, "
-          f"{dt/len(queries)*1e3:.2f} ms/request")
-    print(f"admission: {ctrl.batches_dispatched} buckets, "
-          f"{ctrl.requests_admitted/max(ctrl.batches_dispatched,1):.1f} "
-          f"requests/bucket; plan cache: {eng.plans.hits - plan_h0} hits / "
+          f"through {ARGS.slots} continuous-batching slots: "
+          f"{dt*1e3:.1f} ms total, p50 {_p(lat, 0.50):.2f} / "
+          f"p99 {_p(lat, 0.99):.2f} ms request latency")
+    print(f"scheduler: {sched.admitted} admitted, peak {sched.peak_in_flight} "
+          f"in flight, {sched.streamed_pairs} pairs streamed incrementally; "
+          f"plan cache: {eng.plans.hits - plan_h0} hits / "
           f"{eng.plans.misses - plan_m0} misses; hetero BFS dispatches: "
           f"{eng.hetero_dispatches - hetero0}")
 
     # replay the exact stream: every answer comes from the result cache
     res_h0, res_m0 = eng.results.hits, eng.results.misses
-    ctrl2 = AdmissionController(eng, max_batch=32, max_wait_ms=4.0)
+    sched2 = SlotScheduler(eng, max_slots=ARGS.slots)
     t0 = time.time()
-    replay = asyncio.run(_serve_wave(ctrl2, queries, stagger_s=0.0))
+    replay, _ = asyncio.run(_run_wave(sched2, queries, stagger_s=0.0))
     dt_replay = time.time() - t0
     assert replay == answers
     print(f"replayed the stream from the result cache: "
           f"{dt_replay*1e3:.1f} ms total "
           f"({eng.results.hits - res_h0} hits / "
           f"{eng.results.misses - res_m0} misses)")
+
+    # streaming: pairs arrive through the async iterator while the slot's
+    # BFS is still running — the consumer sees them before result()
+    async def stream_one():
+        # fresh engine (empty result cache) so the pairs really stream
+        # out of a live BFS rather than replaying a cached answer
+        sched3 = SlotScheduler(make_engine(g, "dense", source_batch=16),
+                               max_slots=2)
+        demo = max(range(len(queries)), key=lambda i: len(answers[i]))
+        async with AsyncServer(sched3) as server:
+            ticket = await server.submit(queries[demo])
+            seen = [pair async for pair in ticket]
+            final = await ticket.result()
+        return demo, seen, final
+
+    demo, seen, final = asyncio.run(stream_one())
+    assert set(seen) == final
+    print(f"streamed {len(seen)} pairs incrementally for request {demo}; "
+          f"union equals the final answer: ok.")
 
     # validate a few against the faithful engine
     ring_eng = make_engine(g, "ring")
@@ -213,50 +157,58 @@ def main():
         assert answers[i] == want, (i, len(answers[i]), len(want))
     print("spot-checked 4 requests against the ring engine: agree. ok.")
 
-    # live updates: interleave mutations into the same admission stream.
-    # Each bucket flush applies the updates queued ahead of it first, so
-    # every bucket evaluates at one consistent epoch (snapshot isolation)
-    # and mutations invalidate exactly the cached answers they touch.
+    # live updates: interleave mutations into the same stream.  Writes
+    # build the next epoch on a copy-on-write overlay clone while
+    # in-flight slots keep reading their admission snapshot — each
+    # ticket's .epoch records the version its answer is exact at.
     rng = np.random.default_rng(7)
-    ctrl3 = AdmissionController(eng, max_batch=16, max_wait_ms=2.0)
+    sched4 = SlotScheduler(eng, max_slots=ARGS.slots)
     inv0, ep0 = eng.results.invalidations, eng.epoch
 
     async def mixed_wave():
-        async def one(i):
-            await asyncio.sleep((i % 8) * 0.002)
-            if i % 5 == 0:   # every 5th arrival is a write, not a read
-                s, o = rng.integers(0, g.num_nodes, 2)
-                p = int(rng.integers(0, g.num_preds))
-                if i % 10 == 0:
-                    ctrl3.submit_update(add=[(int(s), p, int(o))])
-                else:
-                    ctrl3.submit_update(remove=[(int(s), p, int(o))])
-                return None
-            q = queries[i % len(queries)]
-            return q, await ctrl3.submit(q)
+        async with AsyncServer(sched4) as server:
+            async def one(i):
+                await asyncio.sleep((i % 8) * 0.002)
+                if i % 5 == 0:   # every 5th arrival is a write, not a read
+                    s, o = rng.integers(0, g.num_nodes, 2)
+                    p = int(rng.integers(0, g.num_preds))
+                    if i % 10 == 0:
+                        server.submit_update(add=[(int(s), p, int(o))])
+                    else:
+                        server.submit_update(remove=[(int(s), p, int(o))])
+                    return None
+                q = queries[i % len(queries)]
+                ticket = await server.submit(q)
+                return q, await ticket.result(), ticket.ticket.epoch
 
-        out = await asyncio.gather(*(one(i) for i in range(80)))
-        await ctrl3.drain()
+            out = await asyncio.gather(*(one(i) for i in range(80)))
         return [x for x in out if x is not None]
 
     t0 = time.time()
     served = asyncio.run(mixed_wave())
     dt = time.time() - t0
+    epochs = sorted({ep for _, _, ep in served})
     print(f"mixed update/query wave: {len(served)} queries + "
-          f"{ctrl3.updates_admitted} updates in {dt*1e3:.1f} ms; "
-          f"epoch {ep0} -> {eng.epoch}; "
+          f"{sched4.updates} updates in {dt*1e3:.1f} ms; "
+          f"epoch {ep0} -> {eng.epoch}, answers served at epochs "
+          f"{epochs[0]}..{epochs[-1]} (snapshot isolation); "
           f"{eng.results.invalidations - inv0} cached answers invalidated "
           f"(footprint-precise), overlay size {eng.delta.size}")
 
     # every answer from the mutated engine must equal a from-scratch
     # evaluation of the final effective graph ONLY for queries whose
-    # footprint saw no mutation after them — the last-flushed answers,
-    # i.e. a fresh batch, are exactly rebuild-fresh:
-    fresh = eng.eval_many([q for q, _ in served[-8:]])
+    # footprint saw no mutation after them — the last-finished answers,
+    # re-asked at the final epoch, are exactly rebuild-fresh:
+    fresh = eng.eval_many([q for q, _, _ in served[-8:]])
     rebuilt = make_engine(eng.effective_graph(), "dense")
-    want = rebuilt.eval_many([q for q, _ in served[-8:]])
+    want = rebuilt.eval_many([q for q, _, _ in served[-8:]])
     assert fresh == want
     print("final-epoch answers match a from-scratch rebuild: ok.")
+
+
+async def _run_wave(sched: SlotScheduler, queries, stagger_s: float):
+    async with AsyncServer(sched) as server:
+        return await _serve_wave(server, queries, stagger_s)
 
 
 if __name__ == "__main__":

@@ -66,10 +66,11 @@ def main(argv=None) -> int:
     root = args.root or _find_root(Path.cwd())
 
     if args.force_host_devices:
-        os.environ.setdefault(
-            "XLA_FLAGS",
-            f"--xla_force_host_platform_device_count="
-            f"{args.force_host_devices}")
+        # per-flag setdefault: appends to an existing XLA_FLAGS instead
+        # of being dropped by a whole-string setdefault, and never
+        # duplicates the flag on re-invocation
+        from repro.launch.env import force_host_devices
+        force_host_devices(args.force_host_devices)
 
     findings: list[Finding] = []
     notes: list[str] = []

@@ -363,6 +363,37 @@ class DeltaOverlay:
         self._extra_count = self._tomb_count = 0
         self._full_excl_cache.clear()
 
+    def clone(self) -> "DeltaOverlay":
+        """Deep copy for copy-on-write multi-version serving: the
+        scheduler's ``submit_update`` swaps the engine's live overlay
+        for a clone *before* applying the next mutation batch, so
+        in-flight queries pinned to the old object keep reading epoch
+        ``e`` while epoch ``e+1`` is built off to the side — writes
+        never stall reads.  ``_base_keys`` is shared (read-only until a
+        compaction replaces it wholesale); every mutable container is
+        copied one level deep (their elements are ints/tuples)."""
+        new = DeltaOverlay.__new__(DeltaOverlay)
+        new.num_nodes = self.num_nodes
+        new.num_preds = self.num_preds
+        new._base_keys = self._base_keys
+        new.epoch = self.epoch
+        new.pred_epoch = self.pred_epoch.copy()
+        new.touched = set(self.touched)
+        new._extra_by_obj = {o: {p: set(s) for p, s in by_p.items()}
+                             for o, by_p in self._extra_by_obj.items()}
+        new._extra_subj = {p: set(s) for p, s in self._extra_subj.items()}
+        new._extra_subj_count = {p: Counter(c) for p, c
+                                 in self._extra_subj_count.items()}
+        new._extra_pairs = {p: set(v) for p, v in self._extra_pairs.items()}
+        new._extra_count = self._extra_count
+        new._tomb = {p: set(v) for p, v in self._tomb.items()}
+        new._tomb_subj = {p: Counter(c) for p, c in self._tomb_subj.items()}
+        new._tomb_count = self._tomb_count
+        new._full_excl_cache = {}
+        new.adds_applied = self.adds_applied
+        new.removes_applied = self.removes_applied
+        return new
+
     # -- checkpoint serialization -------------------------------------------
     def to_state(self) -> Dict[str, np.ndarray]:
         """Flat array pytree for :mod:`repro.checkpoint`.  Only the p < P

@@ -484,6 +484,12 @@ class DenseRPQ(dl.LiveUpdateEngine):
                          unanchored_margin=qp.ANCHORED_MARGIN,
                          footprint=self._footprint(ast))
 
+    def make_stepper(self, steps_per_tick: int = 1) -> "DenseStepper":
+        """A continuously-batchable superstep executor over this engine
+        — the slot scheduler's entry point (see
+        :mod:`repro.core.scheduler`)."""
+        return DenseStepper(self, steps_per_tick=steps_per_tick)
+
     # -- split-plan primitives ---------------------------------------------
     def _pred_edges_base(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
         """(subjects, objects) of the *base* completed edges labeled
@@ -970,3 +976,130 @@ class DenseRPQ(dl.LiveUpdateEngine):
             publish_result(self.results, key, out, idxs, results,
                            footprint=self._footprint(ast), epoch=epoch)
         return results
+
+
+class _DenseSlot:
+    """One in-flight dense BFS under continuous batching: its own
+    frontier/visited planes (host-resident between ticks), pinned to the
+    edge-array snapshot of its admission epoch."""
+
+    __slots__ = ("plan", "start", "edges", "S_pad", "frontier", "visited",
+                 "active")
+
+    def __init__(self, plan: _DensePlan, start: int, edges, S_pad: int,
+                 num_nodes: int):
+        self.plan = plan
+        self.start = start
+        self.edges = edges
+        self.S_pad = S_pad
+        S = plan.g.m + 1
+        planes = np.zeros((num_nodes, S_pad), dtype=np.int8)
+        if plan.g.F & ~1 != 0:
+            planes[start, :S] = _start_row(plan.g)
+        self.frontier = planes
+        self.visited = planes.copy()
+        # no reachable non-eps final state: converged before the 1st step
+        self.active = bool(planes.any())
+
+
+class DenseStepper:
+    """Externally-driven superstep executor over a dynamic slot set —
+    the dense engine's half of the continuous-batching contract (the
+    ring engine's is :class:`repro.core.rpq.RingStepper`).
+
+    Each :meth:`step` advances every active slot by up to
+    ``steps_per_tick`` supersteps.  Slots are grouped by (edge-array
+    snapshot, padded state width) and each group dispatches ONE
+    ``_bfs_chunk_hetero`` call with the group's row count padded to a
+    power of two (min 4), so continuous admission/retirement reuses a
+    bounded set of compiled shapes — the hetero-bucket analogue of the
+    prefill-insert pattern.  ``visited[:, 0]`` (the initial-state
+    plane) only ever grows, which makes incremental result streaming
+    sound.
+
+    Version snapshots: ``add_job`` pins the (subj, pred, obj) arrays
+    the slot's BFS reads.  ``submit_update`` builds the next epoch's
+    effective arrays OFF TO THE SIDE (``_on_overlay_change`` constructs
+    fresh arrays, never mutating old ones), so in-flight slots keep
+    reading their admission epoch — at most two snapshots are live at
+    once (draining + current), keeping the group count bounded.
+    """
+
+    def __init__(self, eng: DenseRPQ, steps_per_tick: int = 1):
+        self.eng = eng
+        self.steps_per_tick = max(1, int(steps_per_tick))
+        self.slots: List[_DenseSlot] = []
+
+    # -- admission / retirement --------------------------------------------
+    def add_job(self, plan: _DensePlan, start: int,
+                edges=None) -> _DenseSlot:
+        """Admit one backward BFS from ``start`` (before the next tick).
+        ``edges`` pins the (subj, pred, obj) snapshot; default = the
+        engine's current effective arrays."""
+        eng = self.eng
+        edges = edges if edges is not None else eng._edges()
+        slot = _DenseSlot(plan, int(start), edges,
+                          eng._pad_width(plan.g.m + 1),
+                          eng.graph.num_nodes)
+        self.slots.append(slot)
+        return slot
+
+    def finished(self, slot: _DenseSlot) -> bool:
+        return not slot.active
+
+    def remove_job(self, slot: _DenseSlot) -> None:
+        slot.active = False
+        try:
+            self.slots.remove(slot)
+        except ValueError:
+            pass
+
+    def reported(self, slot: _DenseSlot) -> Set[int]:
+        """Nodes whose initial-state plane has activated so far —
+        monotone, so callers stream the set difference per tick."""
+        return {int(v) for v in np.nonzero(slot.visited[:, 0] > 0)[0]}
+
+    # -- one tick -----------------------------------------------------------
+    def step(self) -> bool:
+        """Advance every active slot by up to ``steps_per_tick``
+        supersteps (one compiled chunk per (snapshot, width) group).
+        Returns True while any slot still has a live frontier."""
+        eng = self.eng
+        V = eng.graph.num_nodes
+        L = eng.dg.num_labels
+        groups: Dict[Tuple, List[_DenseSlot]] = {}
+        for slot in self.slots:
+            if slot.active:
+                key = (tuple(id(a) for a in slot.edges), slot.S_pad)
+                groups.setdefault(key, []).append(slot)
+        for (_ids, S_pad), members in groups.items():
+            C = 4
+            while C < len(members):
+                C *= 2
+            Bstk = np.zeros((C, L + 1, S_pad), dtype=np.int8)
+            PREDstk = np.zeros((C, S_pad, S_pad), dtype=np.int8)
+            front = np.zeros((C, V, S_pad), dtype=np.int8)
+            vis = np.zeros((C, V, S_pad), dtype=np.int8)
+            for r, slot in enumerate(members):
+                S = slot.plan.g.m + 1
+                B_host, PRED_host = slot.plan.host_tables()
+                Bstk[r, :, :S] = B_host
+                PREDstk[r, :S, :S] = PRED_host
+                front[r] = slot.frontier
+                vis[r] = slot.visited
+            subj, pred, obj = members[0].edges
+            eng.traces.record("bfs_chunk_hetero", C, S_pad)
+            f, v, it = _bfs_chunk_hetero(
+                subj, pred, obj, jnp.asarray(Bstk), jnp.asarray(PREDstk),
+                jnp.asarray(front), jnp.asarray(vis), V,
+                self.steps_per_tick)
+            eng.hetero_dispatches += 1
+            eng._superstep_acc += int(it)
+            f = np.asarray(f)
+            v = np.asarray(v)
+            for r, slot in enumerate(members):
+                slot.frontier = f[r]
+                slot.visited = v[r]
+                if not f[r].any():
+                    slot.active = False
+        return any(s.active for s in self.slots)

@@ -491,6 +491,18 @@ class PlanBundle:
 
     ``extras`` holds engine-specific lazily-built artifacts (e.g. the
     packed block-diagonal table) so a bundle is built once per batch.
+
+    Two lifetimes share this class.  :meth:`build` packs a *static*
+    batch — offsets are dense cumulative sums and never change.  The
+    continuous-batching scheduler instead starts from :meth:`empty` and
+    grows/shrinks the bundle with :meth:`add_slot`/:meth:`free_slot`
+    between supersteps: each admitted plan gets a *slot* — a bit block
+    bucketed up to a power of two (min 4) — and freed slots go on a
+    free list keyed by bucket size, so a retiring query's block is
+    recycled by the next admission of any plan that fits.  Together
+    with :attr:`padded_total` (pow2-rounded packed width in dynamic
+    mode) this keeps the set of compiled kernel signatures bounded no
+    matter how queries churn through the slots.
     """
 
     plans: List[Any]
@@ -499,6 +511,10 @@ class PlanBundle:
     S_total: int
     S_max: int
     extras: Dict[str, Any] = field(default_factory=dict)
+    dynamic: bool = False
+    _refs: Dict[int, int] = field(default_factory=dict)    # id(plan) -> count
+    _index: Dict[int, int] = field(default_factory=dict)   # id(plan) -> block
+    _free: List[int] = field(default_factory=list)         # freed block idxs
 
     @classmethod
     def build(cls, plans: Sequence[Any], sizes: Sequence[int]) -> "PlanBundle":
@@ -508,6 +524,89 @@ class PlanBundle:
             off += s
         return cls(plans=list(plans), sizes=list(sizes), offsets=offsets,
                    S_total=off, S_max=max(sizes) if sizes else 0)
+
+    @classmethod
+    def empty(cls) -> "PlanBundle":
+        """A dynamic (slot-managed) bundle with no plans admitted yet."""
+        return cls(plans=[], sizes=[], offsets=[], S_total=0, S_max=0,
+                   dynamic=True)
+
+    @staticmethod
+    def slot_bucket(size: int) -> int:
+        """Slot width for a plan of ``size`` states: next pow2, min 4."""
+        w = 4
+        while w < size:
+            w *= 2
+        return w
+
+    @property
+    def padded_total(self) -> int:
+        """Packed-word width basis for kernel dispatch: the literal
+        ``S_total`` for static bundles (existing compiled shapes), the
+        next power of two (min 32 = one uint32 word) in dynamic mode so
+        slot churn cannot generate unbounded jit signatures."""
+        if not self.dynamic:
+            return self.S_total
+        w = 32
+        while w < self.S_total:
+            w *= 2
+        return w
+
+    def live_plans(self) -> List[Tuple[Any, int]]:
+        """(plan, offset) pairs of the occupied blocks — freed slots are
+        holes (``plans[i] is None``) and must not be packed."""
+        return [(p, off) for p, off in zip(self.plans, self.offsets)
+                if p is not None]
+
+    def add_slot(self, plan: Any, size: int) -> int:
+        """Admit ``plan`` into the dynamic bundle; returns its bit
+        offset.  A plan already resident shares its block (refcounted);
+        otherwise the smallest free block whose bucket fits is reused,
+        and only when none fits does the bundle grow."""
+        if not self.dynamic:
+            raise ValueError("add_slot requires a dynamic bundle "
+                             "(PlanBundle.empty())")
+        key = id(plan)
+        if key in self._index:
+            self._refs[key] += 1
+            return self.offsets[self._index[key]]
+        bucket = self.slot_bucket(size)
+        block = None
+        best = None
+        for fi, bi in enumerate(self._free):
+            if self.sizes[bi] >= bucket and (
+                    best is None or self.sizes[bi] < self.sizes[best[1]]):
+                best = (fi, bi)
+        if best is not None:
+            self._free.pop(best[0])
+            block = best[1]
+            self.plans[block] = plan
+        else:
+            block = len(self.plans)
+            self.plans.append(plan)
+            self.sizes.append(bucket)
+            self.offsets.append(self.S_total)
+            self.S_total += bucket
+        self._index[key] = block
+        self._refs[key] = 1
+        self.S_max = max(self.S_max, size)
+        self.extras.pop("packed_bwd", None)   # membership changed
+        return self.offsets[block]
+
+    def free_slot(self, plan: Any) -> None:
+        """Release one reference to ``plan``'s slot; the block joins the
+        free list when the last job using the plan retires."""
+        key = id(plan)
+        if key not in self._refs:
+            return
+        self._refs[key] -= 1
+        if self._refs[key] > 0:
+            return
+        block = self._index.pop(key)
+        del self._refs[key]
+        self.plans[block] = None
+        self._free.append(block)
+        self.extras.pop("packed_bwd", None)
 
 
 def make_engine(graph, kind: str = "ring", **kwargs):

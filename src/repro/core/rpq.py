@@ -140,6 +140,13 @@ class _Job:
     the first k subjects in traversal order are not the k smallest —
     stopping early would make limited answers disagree across engines.
     Only the exact ``target`` membership exit remains.
+
+    ``ring``/``ov`` are the job's *version snapshot*, pinned at
+    admission by :meth:`RingStepper.add_job`: a continuously-batched
+    job keeps reading the ring and overlay of its admission epoch even
+    while ``submit_update`` swaps the engine's live overlay (or
+    ``compact`` swaps the ring) for later admissions — multi-version
+    serving with per-job snapshot isolation.
     """
 
     plan: _RingPlan
@@ -152,6 +159,8 @@ class _Job:
     Ds: Dict[int, int] = field(default_factory=dict)
     Dv: Dict[Tuple[int, int], int] = field(default_factory=dict)
     reported: Set[int] = field(default_factory=set)
+    ring: Optional[Ring] = None         # version snapshot (see above)
+    ov: Optional[dl.DeltaOverlay] = None
 
 
 class RingRPQ(dl.LiveUpdateEngine):
@@ -788,21 +797,6 @@ class RingRPQ(dl.LiveUpdateEngine):
         self.sharded_kernel_batches += 1
         return Y[:N]
 
-    def _bundle(self, jobs: List[_Job]) -> PlanBundle:
-        """Block-diagonal bundle over the distinct plans of ``jobs``; sets
-        each job's bit offset.  The packed combined T' table is built
-        lazily (first kernel dispatch) in ``bundle.extras``."""
-        plans: List[_RingPlan] = []
-        index: Dict[int, int] = {}
-        for job in jobs:
-            if id(job.plan) not in index:
-                index[id(job.plan)] = len(plans)
-                plans.append(job.plan)
-        bundle = PlanBundle.build(plans, [p.g.m + 1 for p in plans])
-        for job in jobs:
-            job.offset = bundle.offsets[index[id(job.plan)]]
-        return bundle
-
     def _transition_many(self, tasks: List[_Task],
                          bundle: PlanBundle) -> List[int]:
         """T'[mask] for every wavefront task — one batched ``nfa_step``
@@ -833,10 +827,15 @@ class RingRPQ(dl.LiveUpdateEngine):
         else:
             if "packed_bwd" not in bundle.extras:
                 from ..kernels.nfa_step import pack_block_diagonal
+                # dynamic bundles have freed-slot holes (plan is None) and
+                # a pow2-padded packed width so slot churn keeps compiled
+                # kernel signatures bounded; static bundles are unchanged
+                # (live_plans == plans, padded_total == S_total)
+                live = bundle.live_plans()
                 bundle.extras["packed_bwd"] = pack_block_diagonal(
-                    [p.g.pred_mask for p in bundle.plans],
-                    bundle.offsets, bundle.S_total)
-            W = (bundle.S_total + 31) // 32
+                    [p.g.pred_mask for p, _ in live],
+                    [off for _, off in live], bundle.padded_total)
+            W = (bundle.padded_total + 31) // 32
             X = np.zeros((len(masks), W), dtype=np.uint32)
             shifts = [t.job.offset for t in tasks]
             for i, (m, off) in enumerate(zip(masks, shifts)):
@@ -879,6 +878,12 @@ class RingRPQ(dl.LiveUpdateEngine):
         self._traverse_many([job], deadline=getattr(self, "_deadline", None))
         return job.reported
 
+    def make_stepper(self) -> "RingStepper":
+        """A continuously-batchable superstep executor over this engine
+        — the slot scheduler's entry point (see
+        :mod:`repro.core.scheduler`)."""
+        return RingStepper(self)
+
     def _traverse_many(self, jobs: List[_Job],
                        deadline: Optional[float] = None) -> None:
         """Multi-job backward wavefront BFS: every job's frontier advances
@@ -893,174 +898,271 @@ class RingRPQ(dl.LiveUpdateEngine):
         the merged batch, not per job).
 
         A job that hits its ``target`` is marked done and contributes
-        nothing further (the solo equivalent of returning
-        mid-superstep)."""
-        ring = self.ring
-        wt_p, wt_s = ring.wt_p, ring.wt_s
-        s_levels = wt_s.levels
-        bundle = self._bundle(jobs)
-        ov = self.delta if self.delta is not None and self.delta.size else None
+        nothing further (the solo equivalent of returning mid-superstep).
 
+        One-shot wrapper over :class:`RingStepper`: all jobs admitted
+        before the first superstep, stepped to quiescence.  The stepper
+        owns the superstep body, so the continuous-batching scheduler
+        and this batch path execute identical traversal code."""
+        stepper = RingStepper(self)
+        for job in jobs:
+            stepper.add_job(job)
+        while stepper.queue:
+            if all(job.done for job in jobs):
+                break
+            stepper.step(deadline=deadline)
+
+
+class RingStepper:
+    """Externally-driven superstep executor over a *dynamic* job set.
+
+    Where :meth:`RingRPQ._traverse_many` runs a fixed batch to
+    quiescence, the stepper exposes the superstep as a unit: jobs join
+    between supersteps (:meth:`add_job` — allocating a block-diagonal
+    slot in a dynamic :class:`PlanBundle`), :meth:`step` advances every
+    in-flight frontier by exactly one superstep, and finished or
+    preempted jobs release their slot (:meth:`remove_job`) without
+    disturbing the others.  ``job.reported`` grows monotonically, which
+    is what makes incremental result streaming sound.
+
+    Version snapshots: ``add_job`` pins the ring and overlay the job
+    reads (defaulting to the engine's current ones), so jobs admitted
+    at different epochs traverse different graph versions while still
+    sharing every part-1.5 transition batch — the merged task list only
+    carries state masks, never graph data.
+    """
+
+    def __init__(self, rpq: RingRPQ):
+        self.rpq = rpq
+        self.bundle = PlanBundle.empty()
+        self.jobs: List[_Job] = []
         # entries: (job, object id | None for the full range, D) — the
         # object id keys both the base L_p range and the overlay's delta
         # adjacency / tombstone lookups
-        queue: deque = deque()
-        for job in jobs:
-            D0 = job.plan.g.F & ~1  # state 0 has no incoming edges; strip eps
-            if D0 == 0:
-                job.done = True
-                continue
-            if job.start_objs is not None:
-                # multi-seed union job (split-plan half): every seed
-                # starts with D0 under one shared visited mask
-                for v in job.start_objs:
-                    job.Ds[v] = D0
-                    queue.append((job, v, D0))
-            elif job.start_obj is None:
-                queue.append((job, None, D0))
-            else:
-                job.Ds[job.start_obj] = D0
-                queue.append((job, job.start_obj, D0))
+        self.queue: deque = deque()
+        self._pending: Dict[int, int] = {}   # id(job) -> queued entries
+
+    # -- admission / retirement --------------------------------------------
+    def add_job(self, job: _Job, ring: Optional[Ring] = None,
+                overlay: Optional[dl.DeltaOverlay] = None) -> None:
+        """Admit ``job`` (before the next superstep).  ``ring``/
+        ``overlay`` pin its version snapshot; default = the engine's
+        current ones, which makes the one-shot ``_traverse_many`` path
+        byte-identical to the pre-stepper behavior."""
+        job.ring = ring if ring is not None else self.rpq.ring
+        ov = overlay if overlay is not None else self.rpq.delta
+        job.ov = ov if (ov is not None and ov.size) else None
+        job.offset = self.bundle.add_slot(job.plan, job.plan.g.m + 1)
+        self.jobs.append(job)
+        D0 = job.plan.g.F & ~1  # state 0 has no incoming edges; strip eps
+        if D0 == 0:
+            job.done = True
+            return
+        if job.start_objs is not None:
+            # multi-seed union job (split-plan half): every seed
+            # starts with D0 under one shared visited mask
+            for v in job.start_objs:
+                job.Ds[v] = D0
+                self._push(job, v, D0)
+        elif job.start_obj is None:
+            self._push(job, None, D0)
+        else:
+            job.Ds[job.start_obj] = D0
+            self._push(job, job.start_obj, D0)
+
+    def finished(self, job: _Job) -> bool:
+        """Done flag (target hit / empty automaton) or a drained
+        frontier — either way the job's ``reported`` set is final."""
+        return job.done or self._pending.get(id(job), 0) == 0
+
+    def remove_job(self, job: _Job) -> None:
+        """Retire ``job`` (finished or preempted): free its bundle slot
+        and neutralize any still-queued entries (marking it done makes
+        the superstep body skip them)."""
+        job.done = True
+        self.bundle.free_slot(job.plan)
+        self._pending.pop(id(job), None)
+        try:
+            self.jobs.remove(job)
+        except ValueError:
+            pass
+
+    def _push(self, job: _Job, v: Optional[int], D: int) -> None:
+        self.queue.append((job, v, D))
+        self._pending[id(job)] = self._pending.get(id(job), 0) + 1
+
+    def _pop_entry(self) -> Tuple[_Job, Optional[int], int]:
+        entry = self.queue.popleft()
+        k = id(entry[0])
+        n = self._pending.get(k, 0) - 1
+        if n > 0:
+            self._pending[k] = n
+        else:
+            self._pending.pop(k, None)
+        return entry
+
+    # -- one superstep ------------------------------------------------------
+    def step(self, deadline: Optional[float] = None) -> bool:
+        """Advance the in-flight wavefront by ONE superstep (parts 1,
+        1.5, 2+3 — see the module docstring).  ``wavefront=True`` steps
+        every queued entry; ``False`` steps a single entry (the
+        sequential reference).  Returns True while frontier entries
+        remain queued."""
+        rpq = self.rpq
+        if not self.queue:
+            return False
+        if rpq.wavefront:
+            chunk = list(self.queue)
+            self.queue.clear()
+            self._pending.clear()
+        else:
+            chunk = [self._pop_entry()]
+        stepped = set()
+        for job, _v, _D in chunk:
+            if not job.done and id(job) not in stepped:
+                stepped.add(id(job))
+                job.stats.supersteps += 1
 
         import time as _time
-        while queue:
-            if all(job.done for job in jobs):
-                break
-            if self.wavefront:
-                chunk = list(queue)
-                queue.clear()
-            else:
-                chunk = [queue.popleft()]
-            stepped = set()
-            for job, _v, _D in chunk:
-                if not job.done and id(job) not in stepped:
-                    stepped.add(id(job))
-                    job.stats.supersteps += 1
 
-            # ---- part 1: distinct predicates with D & B[p] != 0, over the
-            # whole chunk — yields the superstep's task list.  With a live
-            # overlay each entry also contributes its delta-adjacency
-            # tasks (the inserted edges of its object), so base and delta
-            # transitions share one part-1.5 batch ----
-            tasks: List[_Task] = []
-            for job, v, D in chunk:
-                if job.done:
-                    continue
-                b, e = ring.object_range(v) if v is not None \
-                    else ring.full_range()
-                g, Bv, stats = job.plan.g, job.plan.Bv, job.stats
-                delta_adj = ov.adds_for_obj(v) \
-                    if ov is not None and ov.has_adds else ()
-                if e > b or delta_adj:
-                    # the deadline probe must tick for overlay-only
-                    # entries too (an insert-heavy graph can traverse
-                    # entirely through delta adjacency)
-                    stats.bfs_steps += 1
-                    if deadline is not None and stats.bfs_steps % 64 == 0 \
-                            and _time.time() > deadline:
-                        raise TimeoutError("query deadline exceeded")
-                if e > b:
+        # ---- part 1: distinct predicates with D & B[p] != 0, over the
+        # whole chunk — yields the superstep's task list.  With a live
+        # overlay each entry also contributes its delta-adjacency
+        # tasks (the inserted edges of its object), so base and delta
+        # transitions share one part-1.5 batch.  Ranges and overlay
+        # lookups go through the JOB's snapshot (job.ring / job.ov) —
+        # mixed-epoch slots each read their own graph version ----
+        tasks: List[_Task] = []
+        for job, v, D in chunk:
+            if job.done:
+                continue
+            ring = job.ring
+            ov = job.ov
+            b, e = ring.object_range(v) if v is not None \
+                else ring.full_range()
+            g, Bv, stats = job.plan.g, job.plan.Bv, job.stats
+            delta_adj = ov.adds_for_obj(v) \
+                if ov is not None and ov.has_adds else ()
+            if e > b or delta_adj:
+                # the deadline probe must tick for overlay-only
+                # entries too (an insert-heavy graph can traverse
+                # entirely through delta adjacency)
+                stats.bfs_steps += 1
+                if deadline is not None and stats.bfs_steps % 64 == 0 \
+                        and _time.time() > deadline:
+                    raise TimeoutError("query deadline exceeded")
+            if e > b:
 
-                    def prune_p(l, prefix, covered, D=D, Bv=Bv, stats=stats):
-                        stats.wt_nodes_visited += 1
-                        return (D & Bv.get((l, prefix), 0)) == 0
+                def prune_p(l, prefix, covered, D=D, Bv=Bv, stats=stats):
+                    stats.wt_nodes_visited += 1
+                    return (D & Bv.get((l, prefix), 0)) == 0
 
-                    for p, rb, re_ in wt_p.range_distinct(b, e,
-                                                          prune=prune_p):
-                        stats.predicates_enumerated += 1
-                        masked = D & g.B.get(p, 0)
-                        if masked == 0:
-                            continue
-                        sb = int(ring.C_p[p]) + rb
-                        se = int(ring.C_p[p]) + re_
-                        if se <= sb:
-                            continue
-                        tasks.append(_Task(job=job, masked=masked, pred=p,
-                                           obj=v, sb=sb, se=se))
-                for p, subs in delta_adj:
+                for p, rb, re_ in ring.wt_p.range_distinct(b, e,
+                                                           prune=prune_p):
+                    stats.predicates_enumerated += 1
                     masked = D & g.B.get(p, 0)
                     if masked == 0:
                         continue
-                    stats.predicates_enumerated += 1
+                    sb = int(ring.C_p[p]) + rb
+                    se = int(ring.C_p[p]) + re_
+                    if se <= sb:
+                        continue
                     tasks.append(_Task(job=job, masked=masked, pred=p,
-                                       obj=v, subjects=subs))
+                                       obj=v, sb=sb, se=se))
+            for p, subs in delta_adj:
+                masked = D & g.B.get(p, 0)
+                if masked == 0:
+                    continue
+                stats.predicates_enumerated += 1
+                tasks.append(_Task(job=job, masked=masked, pred=p,
+                                   obj=v, subjects=subs))
 
-            # ---- part 1.5: bit-parallel D-step for every task at once,
-            # across ALL jobs/plans (and both task kinds) in one batch ----
-            steps = self._transition_many(tasks, bundle)
+        # ---- part 1.5: bit-parallel D-step for every task at once,
+        # across ALL jobs/plans (and both task kinds) in one batch ----
+        steps = rpq._transition_many(tasks, self.bundle)
 
-            # ---- parts 2+3, in task order (== each job's sequential FIFO
-            # order, so per-job visited-mask evolution is identical) ----
-            next_front: List[Tuple[_Job, int, int]] = []
+        # ---- parts 2+3, in task order (== each job's sequential FIFO
+        # order, so per-job visited-mask evolution is identical) ----
+        next_front: List[Tuple[_Job, int, int]] = []
 
-            def activate(job, s, Dstep):
-                """Parts 2b+3 for one subject: merge into the visited
-                mask, report on initial-state activation, requeue."""
-                stats = job.stats
-                old = job.Ds.get(s, 0)
-                Dnew = Dstep & ~old
-                if Dnew == 0:
-                    return False
-                job.Ds[s] = old | Dnew
-                stats.node_state_activations += bin(Dnew).count("1")
-                if Dnew & job.plan.g.initial:
-                    job.reported.add(s)
-                    if job.target is not None and s == job.target:
-                        job.done = True
-                        return True
-                next_front.append((job, s, Dnew))
+        def activate(job, s, Dstep):
+            """Parts 2b+3 for one subject: merge into the visited
+            mask, report on initial-state activation, requeue."""
+            stats = job.stats
+            old = job.Ds.get(s, 0)
+            Dnew = Dstep & ~old
+            if Dnew == 0:
                 return False
+            job.Ds[s] = old | Dnew
+            stats.node_state_activations += bin(Dnew).count("1")
+            if Dnew & job.plan.g.initial:
+                job.reported.add(s)
+                if job.target is not None and s == job.target:
+                    job.done = True
+                    return True
+            next_front.append((job, s, Dnew))
+            return False
 
-            for task, Dstep in zip(tasks, steps):
-                job = task.job
-                if job.done or Dstep == 0:
-                    continue
-                stats = job.stats
-                if task.subjects is not None:
-                    # delta task: the overlay IS the subject list
-                    for s in task.subjects:
-                        stats.subjects_enumerated += 1
-                        if activate(job, s, Dstep):
-                            break
-                    continue
-                Dv = job.Dv
-                # tombstoned base transitions are masked out at subject
-                # granularity: for a single-object task the (s, p, v)
-                # triple is checked directly; a full-range task drops a
-                # subject only when ALL its base triples under p are
-                # tombstoned.  While tombstones exist for p, covered-node
-                # Dv writes are suppressed (a skipped leaf would not have
-                # received Dstep, so the cached intersection would lie).
-                tomb = ov.tomb_pairs(task.pred) if ov is not None else None
-                excl = None
-                if tomb is not None and task.obj is None:
-                    excl = ov.excluded_subjects_full(
-                        task.pred, self._pred_edges_base(task.pred)[0])
-
-                def prune_s(l, prefix, covered, Dstep=Dstep, Dv=Dv,
-                            stats=stats, tomb=tomb):
-                    stats.wt_nodes_visited += 1
-                    if l == s_levels:
-                        return False  # leaves handled on yield
-                    key = (l, prefix)
-                    dv = Dv.get(key, 0)
-                    if Dstep & ~dv == 0:
-                        return True
-                    if (covered or self.paper_dv) and tomb is None:
-                        # sound update: only when the interval spans the whole
-                        # node does every present leaf below receive Dstep
-                        Dv[key] = dv | Dstep
-                    return False
-
-                for s, _srb, _sre in wt_s.range_distinct(task.sb, task.se,
-                                                         prune=prune_s):
+        for task, Dstep in zip(tasks, steps):
+            job = task.job
+            if job.done or Dstep == 0:
+                continue
+            stats = job.stats
+            if task.subjects is not None:
+                # delta task: the overlay IS the subject list
+                for s in task.subjects:
                     stats.subjects_enumerated += 1
-                    if tomb is not None:
-                        if task.obj is not None:
-                            if (s, task.obj) in tomb:
-                                continue
-                        elif s in excl:
-                            continue
                     if activate(job, s, Dstep):
                         break
-            queue.extend(e for e in next_front if not e[0].done)
+                continue
+            Dv = job.Dv
+            ov = job.ov
+            wt_s = job.ring.wt_s
+            s_levels = wt_s.levels
+            # tombstoned base transitions are masked out at subject
+            # granularity: for a single-object task the (s, p, v)
+            # triple is checked directly; a full-range task drops a
+            # subject only when ALL its base triples under p are
+            # tombstoned.  While tombstones exist for p, covered-node
+            # Dv writes are suppressed (a skipped leaf would not have
+            # received Dstep, so the cached intersection would lie).
+            tomb = ov.tomb_pairs(task.pred) if ov is not None else None
+            excl = None
+            if tomb is not None and task.obj is None:
+                # full-range entries only exist for start_obj=None jobs,
+                # which never ride the continuous scheduler (multi-stage
+                # plans are delegated at admission) — so reading the
+                # ENGINE's base edge memo here always matches job.ring
+                excl = ov.excluded_subjects_full(
+                    task.pred, rpq._pred_edges_base(task.pred)[0])
+
+            def prune_s(l, prefix, covered, Dstep=Dstep, Dv=Dv,
+                        stats=stats, tomb=tomb, s_levels=s_levels):
+                stats.wt_nodes_visited += 1
+                if l == s_levels:
+                    return False  # leaves handled on yield
+                key = (l, prefix)
+                dv = Dv.get(key, 0)
+                if Dstep & ~dv == 0:
+                    return True
+                if (covered or rpq.paper_dv) and tomb is None:
+                    # sound update: only when the interval spans the whole
+                    # node does every present leaf below receive Dstep
+                    Dv[key] = dv | Dstep
+                return False
+
+            for s, _srb, _sre in wt_s.range_distinct(task.sb, task.se,
+                                                     prune=prune_s):
+                stats.subjects_enumerated += 1
+                if tomb is not None:
+                    if task.obj is not None:
+                        if (s, task.obj) in tomb:
+                            continue
+                    elif s in excl:
+                        continue
+                if activate(job, s, Dstep):
+                    break
+        for job, s, Dnew in next_front:
+            if not job.done:
+                self._push(job, s, Dnew)
+        return bool(self.queue)

@@ -1,0 +1,561 @@
+"""Continuous-batching slot scheduler: the serving tier over both engines.
+
+The paper's evaluation "simultaneously processes several automaton
+states as well as several graph nodes" — :class:`SlotScheduler` turns
+that bit-parallel batch into a *continuously* batched one, in the style
+of JetStream/MaxText prefill-insert serving: the in-flight wavefront is
+a pool of at most ``max_slots`` slots, new queries join **between
+supersteps** (no waiting for the batch to drain), finished queries free
+their slot immediately, and each slot streams newly-discovered result
+pairs back incrementally — sound because the backward wavefront
+discovers endpoint pairs monotonically (``reported``/``visited`` only
+ever grow).  Bucket flushing (collect ``max_batch`` queries, run
+``eval_many``, repeat) makes every fast query wait for the slowest one
+admitted ahead of it; slots retire each query the superstep it
+converges, which is what moves tail latency (see
+``benchmarks/serving.py``).
+
+Engine contract: both engines expose ``make_stepper()`` returning an
+object with ``step()`` / ``finished(handle)`` / ``remove_job(handle)``
+whose per-superstep execution is the SAME code their one-shot
+``eval_many`` path runs (:class:`repro.core.rpq.RingStepper` over the
+merged task list, :class:`repro.core.dense.DenseStepper` over the
+hetero-bucket BFS) — so slot answers equal ``eval_many`` answers by
+construction, and pow2 slot-bucket padding (dynamic
+:class:`~repro.core.engines.PlanBundle` slots, dense width buckets)
+keeps compiled kernel signatures bounded under churn.
+
+Admission control: ``submit`` raises :class:`Backpressure` once
+``max_queue`` queries are waiting (shed load at the door, don't grow an
+unbounded latency queue), and a per-query ``deadline_s`` preempts the
+query wherever it is — still queued, or mid-flight holding a slot (the
+slot is freed the same tick).
+
+Multi-version epoch serving: ``submit_update`` swaps the engine's
+overlay for a :meth:`~repro.core.delta.DeltaOverlay.clone` before
+applying the mutation, so epoch ``e+1`` is built off to the side while
+in-flight slots keep reading the ring/edge-array/overlay snapshot
+pinned at their admission — writes never stall reads, and every answer
+is exact at its admission epoch (snapshot isolation).  Mutating the
+engine directly (``engine.add_edges``) while slots are in flight is NOT
+supported — route writes through ``submit_update``.
+
+Queries whose plan needs a second stage (unanchored ``(x, E, y)``, or
+a planner ``split``) cannot ride a single-BFS slot; they are evaluated
+synchronously at admission, against the then-current epoch, exactly as
+``eval_many`` delegates them.
+
+``limit`` queries do not stream partial pairs: a limited answer is the
+*sorted prefix* of the full set (:func:`truncate_result`), and the
+first k discovered pairs are not the k smallest — the final result
+arrives all at once.
+
+:class:`AsyncServer` wraps the synchronous core for asyncio serving:
+``await server.submit(q)`` returns an async ticket that is an async
+iterator of result pairs (and awaitable for the final set).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from . import delta as dl
+from . import regex as rx
+from .engines import (Query, QueryLike, QueryStats, as_query, result_key,
+                      truncate_result)
+
+__all__ = ["Backpressure", "QueryTicket", "SlotScheduler", "AsyncServer"]
+
+
+class Backpressure(RuntimeError):
+    """Raised by :meth:`SlotScheduler.submit` when the admission queue
+    is full — the caller should retry later or shed the request."""
+
+
+class QueryTicket:
+    """Handle for one submitted query.
+
+    ``new_pairs()`` drains the incrementally-streamed result pairs
+    discovered since the last call (sorted within each drain; empty for
+    ``limit`` queries until completion).  ``result()`` returns the final
+    answer set once ``done`` — or raises the query's failure
+    (``TimeoutError`` on deadline preemption).  ``epoch`` is the graph
+    epoch the answer is exact at, pinned at slot admission.
+    """
+
+    __slots__ = ("query", "submitted_at", "deadline", "epoch", "state",
+                 "finished_at", "stats", "_result", "_error", "_stream",
+                 "_emitted")
+
+    def __init__(self, query: Query, submitted_at: float,
+                 deadline: Optional[float]):
+        self.query = query
+        self.submitted_at = submitted_at
+        self.deadline = deadline
+        self.epoch: Optional[int] = None
+        self.state = "queued"            # queued | running | done | failed
+        self.finished_at: Optional[float] = None
+        self.stats = QueryStats()
+        self._result: Optional[Set[Tuple[int, int]]] = None
+        self._error: Optional[BaseException] = None
+        self._stream: List[Tuple[int, int]] = []
+        self._emitted: Set[Tuple[int, int]] = set()
+
+    @property
+    def done(self) -> bool:
+        return self.state in ("done", "failed")
+
+    def result(self) -> Set[Tuple[int, int]]:
+        if self.state == "failed":
+            raise self._error
+        if self.state != "done":
+            raise RuntimeError("query still pending — drive the scheduler "
+                               "(step()/drain()) or await the async ticket")
+        return set(self._result)
+
+    def new_pairs(self) -> List[Tuple[int, int]]:
+        out, self._stream = self._stream, []
+        return out
+
+    # -- scheduler side ------------------------------------------------------
+    def _emit(self, pairs) -> int:
+        fresh = [p for p in sorted(pairs) if p not in self._emitted]
+        self._emitted.update(fresh)
+        self._stream.extend(fresh)
+        return len(fresh)
+
+
+@dataclass
+class _Active:
+    """One occupied slot: the ticket plus how reported nodes map back to
+    answer pairs.  ``kind``: "obj" ((x,E,o) — reported node n is the
+    subject of (n, obj)), "subj" ((s,E,y) — n is the object of
+    (subject, n)), "both" ((s,E,o) — the answer exists iff ``target``
+    reports)."""
+
+    ticket: QueryTicket
+    handle: Any
+    kind: str
+    target: Optional[int]
+    key: Tuple
+    footprint: frozenset
+    seen: Set[int] = field(default_factory=set)
+
+
+class _RingSlots:
+    """Ring-engine adapter: slots are :class:`~repro.core.rpq._Job`\\ s
+    in a shared :class:`~repro.core.rpq.RingStepper` wavefront."""
+
+    def __init__(self, eng):
+        self.eng = eng
+        self.stepper = eng.make_stepper()
+
+    def snapshot(self):
+        return (self.eng.ring, self.eng.delta)
+
+    def plan(self, ast):
+        return self.eng._plan(ast)
+
+    def start_cost(self, plan) -> Optional[int]:
+        return self.eng._start_cost(plan.g)
+
+    def admit(self, plan, start: int, target: Optional[int], snapshot,
+              stats: QueryStats):
+        from .rpq import _Job
+        job = _Job(plan=plan, start_obj=int(start), stats=stats,
+                   target=target)
+        self.stepper.add_job(job, ring=snapshot[0], overlay=snapshot[1])
+        return job
+
+    def step(self) -> None:
+        self.stepper.step()
+
+    def finished(self, job) -> bool:
+        return self.stepper.finished(job)
+
+    def reported(self, job) -> Set[int]:
+        return job.reported
+
+    def release(self, job) -> None:
+        self.stepper.remove_job(job)
+
+
+class _DenseSlots:
+    """Dense-engine adapter: slots are independent hetero-bucket BFS
+    rows in a :class:`~repro.core.dense.DenseStepper`."""
+
+    def __init__(self, eng, steps_per_tick: int = 1):
+        self.eng = eng
+        self.stepper = eng.make_stepper(steps_per_tick=steps_per_tick)
+
+    def snapshot(self):
+        return self.eng._edges()
+
+    def plan(self, ast):
+        return self.eng._plan(ast)
+
+    def start_cost(self, plan) -> Optional[int]:
+        return None   # dense eval_many always runs single-BFS rows forward
+
+    def admit(self, plan, start: int, target: Optional[int], snapshot,
+              stats: QueryStats):
+        return self.stepper.add_job(plan, int(start), edges=snapshot)
+
+    def step(self) -> None:
+        self.stepper.step()
+
+    def finished(self, slot) -> bool:
+        return self.stepper.finished(slot)
+
+    def reported(self, slot) -> Set[int]:
+        return self.stepper.reported(slot)
+
+    def release(self, slot) -> None:
+        self.stepper.remove_job(slot)
+
+
+class SlotScheduler:
+    """Slot-based continuous-batching executor over one engine.
+
+    Synchronous, externally-driven core (``submit`` then ``step()`` /
+    ``drain()``), which is what makes scheduler-vs-``eval_many`` parity
+    property-testable; :class:`AsyncServer` adds the asyncio pump.
+
+    Knobs: ``max_slots`` (in-flight pool size), ``max_queue``
+    (admission backpressure depth), ``steps_per_tick`` (dense: compiled
+    supersteps per tick — streaming granularity vs dispatch overhead),
+    ``clock`` (injectable for deadline tests).
+    """
+
+    def __init__(self, engine, max_slots: int = 8, max_queue: int = 256,
+                 steps_per_tick: int = 1,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.max_slots = int(max_slots)
+        self.max_queue = int(max_queue)
+        self.clock = clock
+        if hasattr(engine, "ring"):
+            self.slots: Any = _RingSlots(engine)
+        elif hasattr(engine, "dg"):
+            self.slots = _DenseSlots(engine, steps_per_tick=steps_per_tick)
+        else:
+            raise TypeError(f"unsupported engine {type(engine).__name__}")
+        self.waiting: deque = deque()      # QueryTickets not yet admitted
+        self.active: List[_Active] = []
+        # observability counters
+        self.submitted = 0
+        self.admitted = 0
+        self.completed = 0
+        self.preempted = 0
+        self.rejected = 0
+        self.cache_hits = 0
+        self.delegated = 0
+        self.updates = 0
+        self.streamed_pairs = 0
+        self.peak_in_flight = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, query: QueryLike,
+               deadline_s: Optional[float] = None) -> QueryTicket:
+        """Enqueue a query; raises :class:`Backpressure` when
+        ``max_queue`` queries are already waiting."""
+        if len(self.waiting) >= self.max_queue:
+            self.rejected += 1
+            raise Backpressure(
+                f"admission queue full ({self.max_queue} waiting)")
+        now = self.clock()
+        ticket = QueryTicket(as_query(query), now,
+                             now + deadline_s if deadline_s else None)
+        self.waiting.append(ticket)
+        self.submitted += 1
+        return ticket
+
+    def submit_update(self, add=None, remove=None) -> int:
+        """Apply a mutation batch as the next epoch WITHOUT stalling
+        in-flight reads: the live overlay is swapped for a clone first
+        (copy-on-write), so slots pinned to the old overlay/ring/edge
+        snapshot keep answering at their admission epoch while new
+        admissions see the new one.  Returns the new epoch."""
+        eng = self.engine
+        if eng.delta is not None:
+            eng.delta = eng.delta.clone()
+            # the stale checker must follow the live object: cached
+            # results are judged against the NEWEST epoch history
+            eng.results.stale_checker = eng.delta.entry_is_stale
+        self.updates += 1
+        return dl.apply_engine_updates(eng, add, remove)
+
+    # -- the tick ------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler tick: preempt expired deadlines, admit from the
+        waiting queue into free slots, advance the wavefront by one
+        superstep, harvest newly-converged slots.  Returns True while
+        any query is in flight or waiting."""
+        now = self.clock()
+        self._expire(now)
+        self._admit(now)
+        if self.active:
+            self.slots.step()
+            self._harvest()
+        return bool(self.active or self.waiting)
+
+    def drain(self) -> None:
+        """Drive ticks until every submitted query settles."""
+        while self.step():
+            pass
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.active)
+
+    def pending(self) -> bool:
+        return bool(self.active or self.waiting)
+
+    # -- internals -----------------------------------------------------------
+    def _fail(self, ticket: QueryTicket, err: BaseException) -> None:
+        ticket._error = err
+        ticket.state = "failed"
+        ticket.finished_at = self.clock()
+
+    def _finish(self, ticket: QueryTicket, out: Set[Tuple[int, int]],
+                key: Tuple, footprint: frozenset) -> None:
+        q = ticket.query
+        ticket.stats.results = len(out)
+        out = truncate_result(out, q.limit)
+        if q.limit is None:
+            self.streamed_pairs += ticket._emit(out)
+        self.engine.results.put(key, out, footprint=footprint,
+                                epoch=ticket.epoch or 0)
+        ticket._result = out
+        ticket.state = "done"
+        ticket.finished_at = self.clock()
+        self.completed += 1
+
+    def _expire(self, now: float) -> None:
+        for ticket in [t for t in self.waiting
+                       if t.deadline is not None and now > t.deadline]:
+            self.waiting.remove(ticket)
+            self._fail(ticket, TimeoutError("query deadline exceeded"))
+            self.preempted += 1
+        for a in [a for a in self.active
+                  if a.ticket.deadline is not None
+                  and now > a.ticket.deadline]:
+            # deadline-aware preemption: the slot frees THIS tick, so
+            # the stragglers behind it stop paying for the monster query
+            self.slots.release(a.handle)
+            self.active.remove(a)
+            self._fail(a.ticket, TimeoutError("query deadline exceeded"))
+            self.preempted += 1
+
+    def _admit(self, now: float) -> None:
+        while self.waiting and len(self.active) < self.max_slots:
+            ticket = self.waiting.popleft()
+            try:
+                self._admit_one(ticket, now)
+            except TimeoutError as e:
+                self._fail(ticket, e)
+            self.peak_in_flight = max(self.peak_in_flight, len(self.active))
+
+    def _admit_one(self, ticket: QueryTicket, now: float) -> None:
+        eng = self.engine
+        q = ticket.query
+        key = result_key(q)
+        cached = eng.results.get_covering(key)
+        if cached is not None:
+            ticket.epoch = eng.epoch
+            ticket.stats.result_cache_hits += 1
+            self.cache_hits += 1
+            if q.limit is None:
+                self.streamed_pairs += ticket._emit(cached)
+            ticket._result = set(cached)
+            ticket.stats.results = len(cached)
+            ticket.state = "done"
+            ticket.finished_at = self.clock()
+            self.completed += 1
+            return
+        ast = rx.parse(q.expr)
+        footprint = eng._footprint(ast)
+        qplan = eng._decide(ast, q.subject is not None, q.obj is not None,
+                            ticket.stats)
+        null = rx.nullable(ast)
+        ticket.epoch = eng.epoch
+        ticket.state = "running"
+        if (q.subject is None and q.obj is None) or qplan.mode == "split":
+            # multi-stage plans (second stage depends on the first) are
+            # delegated synchronously at the current epoch, exactly as
+            # eval_many does — they cannot occupy a single-BFS slot
+            self.delegated += 1
+            remaining = None
+            if ticket.deadline is not None:
+                remaining = ticket.deadline - now
+                if remaining <= 0:
+                    raise TimeoutError("query deadline exceeded")
+            out = eng.eval(q.expr, q.subject, q.obj, q.limit,
+                           deadline_s=remaining)
+            self._finish(ticket, out, key, footprint)
+            return
+        if q.subject is not None and q.obj is not None:
+            if null and q.subject == q.obj:
+                self._finish(ticket, {(q.subject, q.obj)}, key, footprint)
+                return
+            if qplan.mode == "reverse":
+                plan, start, tgt = (self.slots.plan(rx.reverse(ast)),
+                                    q.subject, q.obj)
+            elif qplan.mode == "forward":
+                plan, start, tgt = self.slots.plan(ast), q.obj, q.subject
+            else:   # naive: the ring's Sec.-5 start-side heuristic
+                p_bwd = self.slots.plan(ast)
+                cost = self.slots.start_cost(p_bwd)
+                if cost is None:
+                    plan, start, tgt = p_bwd, q.obj, q.subject
+                else:
+                    p_fwd = self.slots.plan(rx.reverse(ast))
+                    if cost <= self.slots.start_cost(p_fwd):
+                        plan, start, tgt = p_bwd, q.obj, q.subject
+                    else:
+                        plan, start, tgt = p_fwd, q.subject, q.obj
+            kind = "both"
+        elif q.obj is not None:                      # (x, E, o)
+            plan, start, tgt, kind = self.slots.plan(ast), q.obj, None, "obj"
+        else:                                        # (s, E, y)
+            plan, start, tgt, kind = (self.slots.plan(rx.reverse(ast)),
+                                      q.subject, None, "subj")
+        ticket.stats.plan_actual_frontier = 1
+        handle = self.slots.admit(plan, start, tgt, self.slots.snapshot(),
+                                  ticket.stats)
+        active = _Active(ticket=ticket, handle=handle, kind=kind, target=tgt,
+                         key=key, footprint=footprint)
+        self.active.append(active)
+        self.admitted += 1
+        if null and kind != "both" and q.limit is None:
+            # the zero-length eps match is known at admission — stream it
+            anchor = q.obj if kind == "obj" else q.subject
+            self.streamed_pairs += ticket._emit([(anchor, anchor)])
+
+    def _harvest(self) -> None:
+        for a in list(self.active):
+            ticket, q = a.ticket, a.ticket.query
+            rep = self.slots.reported(a.handle)
+            new = rep - a.seen
+            a.seen |= new
+            if new and q.limit is None:
+                if a.kind == "obj":
+                    self.streamed_pairs += ticket._emit(
+                        (s, q.obj) for s in new)
+                elif a.kind == "subj":
+                    self.streamed_pairs += ticket._emit(
+                        (q.subject, o) for o in new)
+            hit = a.kind == "both" and a.target in a.seen
+            if not hit and not self.slots.finished(a.handle):
+                continue
+            self.slots.release(a.handle)
+            self.active.remove(a)
+            null = rx.nullable(rx.parse(q.expr))
+            out: Set[Tuple[int, int]] = set()
+            if a.kind == "both":
+                if hit:
+                    out.add((q.subject, q.obj))
+            elif a.kind == "obj":
+                if null:
+                    out.add((q.obj, q.obj))
+                out.update((s, q.obj) for s in a.seen)
+            else:
+                if null:
+                    out.add((q.subject, q.subject))
+                out.update((q.subject, o) for o in a.seen)
+            self._finish(ticket, out, a.key, a.footprint)
+
+
+_DONE = object()
+
+
+class AsyncTicket:
+    """Async view of a :class:`QueryTicket`: an async iterator of result
+    pairs, awaitable (via :meth:`result`) for the final answer set."""
+
+    def __init__(self, ticket: QueryTicket):
+        self.ticket = ticket
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._settled = asyncio.Event()
+
+    def __aiter__(self) -> "AsyncTicket":
+        return self
+
+    async def __anext__(self) -> Tuple[int, int]:
+        item = await self._queue.get()
+        if item is _DONE:
+            raise StopAsyncIteration
+        return item
+
+    async def result(self) -> Set[Tuple[int, int]]:
+        await self._settled.wait()
+        return self.ticket.result()
+
+
+class AsyncServer:
+    """asyncio pump around a :class:`SlotScheduler`::
+
+        server = AsyncServer(SlotScheduler(engine))
+        async with server:
+            ticket = await server.submit(Query("a/b*", obj=7))
+            async for s, o in ticket:      # pairs stream as discovered
+                ...
+            final = await ticket.result()
+
+    The pump coroutine runs one scheduler tick per loop iteration and
+    forwards each ticket's ``new_pairs()`` into its async queue, so
+    slot progress and result streaming interleave with the caller's own
+    coroutines; it idles (``idle_sleep_s``) while no query is in
+    flight."""
+
+    def __init__(self, scheduler: SlotScheduler,
+                 idle_sleep_s: float = 0.001):
+        self.scheduler = scheduler
+        self.idle_sleep_s = idle_sleep_s
+        self._live: List[AsyncTicket] = []
+        self._task: Optional[asyncio.Task] = None
+        self._closing = False
+
+    async def __aenter__(self) -> "AsyncServer":
+        self._task = asyncio.ensure_future(self._pump())
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        self._closing = True
+        if self._task is not None:
+            await self._task
+
+    async def submit(self, query: QueryLike,
+                     deadline_s: Optional[float] = None) -> AsyncTicket:
+        """May raise :class:`Backpressure` — admission control applies
+        to async callers identically."""
+        at = AsyncTicket(self.scheduler.submit(query, deadline_s=deadline_s))
+        self._live.append(at)
+        return at
+
+    def submit_update(self, add=None, remove=None) -> int:
+        return self.scheduler.submit_update(add=add, remove=remove)
+
+    def _flush(self) -> None:
+        for at in list(self._live):
+            for pair in at.ticket.new_pairs():
+                self._queue_put(at, pair)
+            if at.ticket.done:
+                self._queue_put(at, _DONE)
+                at._settled.set()
+                self._live.remove(at)
+
+    @staticmethod
+    def _queue_put(at: AsyncTicket, item) -> None:
+        at._queue.put_nowait(item)
+
+    async def _pump(self) -> None:
+        while not (self._closing and not self.scheduler.pending()
+                   and not self._live):
+            progressed = self.scheduler.step()
+            self._flush()
+            await asyncio.sleep(0 if progressed else self.idle_sleep_s)
+        self._flush()

@@ -1,9 +1,9 @@
-import os
-# setdefault, not assignment: importing this module must not clobber a
-# caller's forced device count (the analysis CLI and the multidevice CI
-# job set their own XLA_FLAGS before any jax import)
-os.environ.setdefault(
-    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# per-flag setdefault, not assignment: importing this module must not
+# clobber a caller's forced device count (the analysis CLI and the
+# multidevice CI job set their own XLA_FLAGS before any jax import) —
+# and must not drop the flag when XLA_FLAGS already holds other flags
+from .env import force_host_devices
+force_host_devices(512)
 
 """Multi-pod dry-run driver (deliverable e).
 

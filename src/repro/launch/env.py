@@ -1,0 +1,42 @@
+"""Process-environment helpers for launch scripts. NO jax imports here —
+these must run *before* the first jax import to have any effect.
+
+The trap this module exists for: ``XLA_FLAGS`` is a single
+space-separated string, so the obvious
+
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --flag=N"
+
+appends a duplicate every invocation (re-exec, test re-import, a wrapper
+script that already set the flag), and XLA's flag parser rejects or
+silently last-wins on duplicates depending on version.  And a plain
+``setdefault`` of the whole string silently drops the new flag when the
+variable exists with *other* flags in it.  :func:`set_xla_flag` is the
+per-flag setdefault both launch CLIs and the examples should use."""
+from __future__ import annotations
+
+import os
+
+__all__ = ["set_xla_flag", "force_host_devices"]
+
+
+def set_xla_flag(name: str, value, env=os.environ) -> bool:
+    """Idempotent per-flag setdefault into ``XLA_FLAGS``.
+
+    Adds ``--<name>=<value>`` unless a ``--<name>=...`` entry is already
+    present (any value — an existing caller-chosen value wins, matching
+    ``setdefault`` semantics).  Returns True if the flag was added.
+    Must be called before the first jax import."""
+    prefix = f"--{name}="
+    existing = env.get("XLA_FLAGS", "")
+    if any(tok.startswith(prefix) for tok in existing.split()):
+        return False
+    env["XLA_FLAGS"] = f"{existing} {prefix}{value}".strip()
+    return True
+
+
+def force_host_devices(n: int, env=os.environ) -> bool:
+    """Force ``n`` virtual CPU devices (the multidevice-on-CPU harness
+    every launch CLI exposes as ``--force-host-devices``).  No-op when
+    the flag is already set, so wrappers and re-imports stay safe."""
+    return set_xla_flag("xla_force_host_platform_device_count", int(n),
+                        env=env)

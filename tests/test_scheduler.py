@@ -1,0 +1,328 @@
+"""Continuous-batching slot scheduler: parity against one-shot
+``eval_many`` / the oracle over random arrival interleavings (both
+engines, including under interleaved updates at snapshot epochs),
+admission backpressure, deadline preemption, incremental pair streaming,
+the dynamic PlanBundle slot allocator, the async serving layer, and the
+``benchmarks/compare.py`` perf-regression gate."""
+import asyncio
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.engines import PlanBundle, Query, eval_many, make_engine
+from repro.core.fixtures import random_graph
+from repro.core.oracle import eval_oracle
+from repro.core.scheduler import (AsyncServer, Backpressure, QueryTicket,
+                                  SlotScheduler)
+
+EXPRS = ["0/1*", "(0|1)/2", "2+", "^1/0*", "0/1/2", "(0|2)*"]
+
+
+def _random_query(rnd, V):
+    expr = rnd.choice(EXPRS)
+    shape = rnd.randrange(4)
+    if shape == 0:
+        return Query(expr, obj=rnd.randrange(V))
+    if shape == 1:
+        return Query(expr, subject=rnd.randrange(V))
+    if shape == 2:
+        return Query(expr, subject=rnd.randrange(V), obj=rnd.randrange(V))
+    return Query(expr)            # unanchored — delegated synchronously
+
+
+# ---------------------------------------------------------------------
+# THE acceptance property: continuous admission/retirement returns
+# exactly the one-shot eval_many answer sets, on both engines
+# ---------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_scheduler_matches_eval_many_random_interleavings(seed):
+    rnd = random.Random(seed)
+    g = random_graph(12, 3, 40, seed=1 + seed % 7, pred_zipf=False)
+    queries = [_random_query(rnd, g.num_nodes)
+               for _ in range(rnd.randrange(4, 14))]
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        want = eval_many(make_engine(g, kind), queries)
+        sched = SlotScheduler(eng, max_slots=rnd.randrange(1, 5))
+        tickets: list = []
+        i = 0
+        # random arrival interleaving: submissions and ticks in any order
+        while i < len(queries) or sched.pending():
+            if i < len(queries) and rnd.random() < 0.5:
+                tickets.append(sched.submit(queries[i]))
+                i += 1
+            else:
+                sched.step()
+        for q, t, w in zip(queries, tickets, want):
+            assert t.result() == w, (kind, q)
+            # streaming soundness: for unlimited queries the drained
+            # pairs union to exactly the final answer
+            if q.limit is None:
+                assert t._emitted == w, (kind, q)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_scheduler_snapshot_isolation_under_updates(seed):
+    """Interleave submit / step / submit_update arbitrarily: every
+    ticket's answer must equal the oracle on the *effective graph at the
+    ticket's admission epoch* — in-flight queries are never torn by a
+    concurrent write (copy-on-write overlay clone)."""
+    rnd = random.Random(seed)
+    g = random_graph(11, 3, 35, seed=2 + seed % 5, pred_zipf=False)
+    V, P = g.num_nodes, g.num_preds
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        sched = SlotScheduler(eng, max_slots=2)
+        snapshots = {0: eng.effective_graph()}
+        issued = []            # (ticket, query)
+        for _ in range(rnd.randrange(10, 30)):
+            op = rnd.random()
+            if op < 0.45:
+                issued.append((sched.submit(_random_query(rnd, V)), None))
+                issued[-1] = (issued[-1][0], issued[-1][0].query)
+            elif op < 0.65:
+                adds = [(rnd.randrange(V), rnd.randrange(P),
+                         rnd.randrange(V))
+                        for _ in range(rnd.randrange(1, 3))]
+                rems = [(rnd.randrange(V), rnd.randrange(P),
+                         rnd.randrange(V))]
+                ep = sched.submit_update(add=adds, remove=rems)
+                snapshots[ep] = eng.effective_graph()
+            else:
+                sched.step()
+        sched.drain()
+        for ticket, q in issued:
+            want = eval_oracle(snapshots[ticket.epoch], q.expr,
+                               q.subject, q.obj)
+            assert ticket.result() == want, (kind, q, ticket.epoch)
+
+
+# ---------------------------------------------------------------------
+# admission control, deadlines, streaming, limits
+# ---------------------------------------------------------------------
+
+def test_backpressure_rejects_at_max_queue():
+    g = random_graph(10, 2, 20, seed=2, pred_zipf=False)
+    sched = SlotScheduler(make_engine(g, "ring"), max_slots=1, max_queue=2)
+    sched.submit(Query("0/1*", obj=1))
+    sched.submit(Query("0/1*", obj=2))
+    with pytest.raises(Backpressure):
+        sched.submit(Query("0/1*", obj=3))
+    assert sched.rejected == 1
+    sched.drain()
+    # queue drained -> admission opens again
+    t = sched.submit(Query("0/1*", obj=3))
+    sched.drain()
+    assert t.result() == eval_oracle(g, "0/1*", None, 3)
+
+
+def test_deadline_preempts_in_flight_slot_and_spares_stragglers():
+    g = random_graph(12, 3, 40, seed=6, pred_zipf=False)
+    clk = [0.0]
+    for kind in ("ring", "dense"):
+        sched = SlotScheduler(make_engine(g, kind), max_slots=1,
+                              clock=lambda: clk[0])
+        clk[0] = 0.0
+        slow = sched.submit(Query("(0|1|2)*", obj=5), deadline_s=1.0)
+        fast = sched.submit(Query("0/1*", obj=3))
+        sched.step()                  # admits `slow` into the only slot
+        assert slow.state == "running"
+        clk[0] = 2.0                  # past the deadline mid-flight
+        sched.drain()
+        with pytest.raises(TimeoutError):
+            slow.result()
+        assert sched.preempted == 1 and sched.in_flight == 0
+        # the preemption freed the slot for the query queued behind it
+        assert fast.result() == eval_oracle(g, "0/1*", None, 3), kind
+
+
+def test_deadline_expires_queued_ticket_before_admission():
+    g = random_graph(10, 2, 20, seed=2, pred_zipf=False)
+    clk = [0.0]
+    sched = SlotScheduler(make_engine(g, "ring"), clock=lambda: clk[0])
+    t = sched.submit(Query("0/1*", obj=1), deadline_s=0.5)
+    clk[0] = 1.0
+    sched.drain()
+    with pytest.raises(TimeoutError):
+        t.result()
+
+
+def test_limit_queries_do_not_stream_and_truncate_sorted():
+    g = random_graph(12, 3, 45, seed=19, pred_zipf=False)
+    full = sorted(eval_oracle(g, "0/1*", None, 3))
+    assert len(full) >= 2, "fixture must have enough results to truncate"
+    for kind in ("ring", "dense"):
+        sched = SlotScheduler(make_engine(g, kind))
+        t = sched.submit(Query("0/1*", obj=3, limit=2))
+        sched.drain()
+        # a limited answer is the sorted prefix, so partial pairs cannot
+        # stream (the first k discovered are not the k smallest)
+        assert t.new_pairs() == []
+        assert t.result() == set(full[:2]), kind
+
+
+def test_result_cache_hit_completes_without_occupying_a_slot():
+    g = random_graph(10, 2, 20, seed=2, pred_zipf=False)
+    sched = SlotScheduler(make_engine(g, "ring"))
+    a = sched.submit(Query("0/1*", obj=1))
+    sched.drain()
+    b = sched.submit(Query("0/1*", obj=1))
+    sched.step()
+    assert b.done and b.result() == a.result()
+    assert sched.cache_hits == 1 and sched.admitted == 1
+
+
+# ---------------------------------------------------------------------
+# dynamic PlanBundle slots
+# ---------------------------------------------------------------------
+
+def test_plan_bundle_dynamic_slots_reuse_freed_blocks():
+    class _G:                      # minimal stand-in with a state count
+        def __init__(self, m):
+            self.m = m
+
+    class _P:
+        def __init__(self, m):
+            self.g = _G(m)
+
+    b = PlanBundle.empty()
+    p1, p2, p3 = _P(2), _P(6), _P(2)
+    off1 = b.add_slot(p1, p1.g.m + 1)        # bucket 4
+    off2 = b.add_slot(p2, p2.g.m + 1)        # bucket 8
+    assert (off1, off2) == (0, 4)
+    assert b.padded_total >= b.S_total
+    b.free_slot(p1)
+    # freed bucket-4 block is reused before growing the bundle
+    assert b.add_slot(p3, p3.g.m + 1) == off1
+    assert len(b.live_plans()) == 2
+    # refcounting: the same plan object admitted twice frees once
+    off2b = b.add_slot(p2, p2.g.m + 1)
+    assert off2b == off2
+    b.free_slot(p2)
+    assert any(p is p2 for p, _ in b.live_plans())
+    b.free_slot(p2)
+    assert not any(p is p2 for p, _ in b.live_plans())
+
+
+def test_plan_bundle_static_build_rejects_slot_ops():
+    class _G:
+        def __init__(self, m):
+            self.m = m
+
+    class _P:
+        def __init__(self, m):
+            self.g = _G(m)
+
+    b = PlanBundle.build([_P(2)], [3])
+    with pytest.raises(ValueError):
+        b.add_slot(_P(2), 3)
+
+
+# ---------------------------------------------------------------------
+# async serving layer
+# ---------------------------------------------------------------------
+
+def test_async_server_streams_pairs_and_settles():
+    g = random_graph(12, 3, 40, seed=6, pred_zipf=False)
+    eng = make_engine(g, "dense")
+
+    async def main():
+        async with AsyncServer(SlotScheduler(eng, max_slots=2)) as server:
+            t1 = await server.submit(Query("0/1*", obj=3))
+            t2 = await server.submit(Query("(0|1)/2", subject=2))
+            streamed = [p async for p in t1]
+            return streamed, await t1.result(), await t2.result()
+
+    streamed, r1, r2 = asyncio.run(main())
+    assert set(streamed) == r1 == eval_oracle(g, "0/1*", None, 3)
+    assert r2 == eval_oracle(g, "(0|1)/2", 2, None)
+
+
+def test_async_server_interleaves_updates():
+    g = random_graph(11, 3, 35, seed=23, pred_zipf=False)
+    eng = make_engine(g, "ring")
+
+    async def main():
+        sched = SlotScheduler(eng, max_slots=2)
+        async with AsyncServer(sched) as server:
+            before = eng.effective_graph()
+            t1 = await server.submit(Query("0/1*", obj=3))
+            server.submit_update(add=[(0, 1, 3), (2, 0, 1)])
+            after = eng.effective_graph()
+            t2 = await server.submit(Query("0/1*", obj=3))
+            return before, after, await t1.result(), await t2.result(), t1, t2
+
+    before, after, r1, r2, t1, t2 = asyncio.run(main())
+    assert r1 == eval_oracle(before if t1.ticket.epoch == 0 else after,
+                             "0/1*", None, 3)
+    assert t2.ticket.epoch == 1
+    assert r2 == eval_oracle(after, "0/1*", None, 3)
+
+
+# ---------------------------------------------------------------------
+# benchmarks/compare.py — the perf-regression gate
+# ---------------------------------------------------------------------
+
+def _compare_mod():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks import compare
+    return compare
+
+
+def test_compare_gate_fails_on_injected_slowdown(tmp_path):
+    compare = _compare_mod()
+    prev = {"smoke": True, "suites": {}, "rows": {
+        "serving/dense/qps100/slot_p99_ms": 10.0,
+        "serving/dense/qps100/p99_speedup": 4.0,
+        "updates/ingest/us_per_edge": 100.0,
+        "updates/query/overlay64/overlay_rows": 64.0,   # not gated
+    }}
+    good = {"smoke": True, "suites": {}, "rows": {
+        **prev["rows"],
+        "serving/dense/qps100/slot_p99_ms": 12.0,       # +20% — within 25%
+        "new/only_in_current_us": 5.0,                  # no baseline: skips
+    }}
+    bad = {"smoke": True, "suites": {}, "rows": {
+        **prev["rows"],
+        "serving/dense/qps100/slot_p99_ms": 12.6,       # +26% — regression
+        "serving/dense/qps100/p99_speedup": 2.9,        # -27.5% — regression
+        "updates/query/overlay64/overlay_rows": 1e9,    # ignored: not gated
+    }}
+    import json
+    pf = tmp_path / "prev.json"
+    pf.write_text(json.dumps(prev))
+    gf = tmp_path / "good.json"
+    gf.write_text(json.dumps(good))
+    bf = tmp_path / "bad.json"
+    bf.write_text(json.dumps(bad))
+    assert compare.main(["--current", str(gf), "--previous", str(pf)]) == 0
+    assert compare.main(["--current", str(bf), "--previous", str(pf)]) == 1
+    regs = compare.compare_rows(prev["rows"], bad["rows"])
+    assert {k for k, *_ in regs} == {"serving/dense/qps100/slot_p99_ms",
+                                     "serving/dense/qps100/p99_speedup"}
+
+
+def test_compare_gate_skips_without_previous(tmp_path, capsys, monkeypatch):
+    compare = _compare_mod()
+    import json
+    cf = tmp_path / "cur.json"
+    cf.write_text(json.dumps({"smoke": True, "suites": {}, "rows": {}}))
+    # missing file baseline
+    assert compare.main(["--current", str(cf),
+                         "--previous", str(tmp_path / "absent.json")]) == 0
+    # --fetch-previous without credentials
+    monkeypatch.delenv("GITHUB_TOKEN", raising=False)
+    monkeypatch.delenv("GITHUB_REPOSITORY", raising=False)
+    assert compare.main(["--current", str(cf), "--fetch-previous"]) == 0
+    out = capsys.readouterr().out
+    assert "SKIPPED" in out
