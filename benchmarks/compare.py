@@ -17,14 +17,20 @@ Direction-aware per row key (the ``rows`` dict of the JSON document
     ``current > previous * (1 + threshold)``;
   * ``speedup`` / throughput-flavoured rows (``speedup`` in the key)
     regress when ``current < previous * (1 - threshold)``;
+  * ``overhead`` rows (``overhead`` in the key) are *absolute* ratios
+    gated against ``1 + overhead-threshold`` (default 2%) from the
+    current document alone — no baseline needed, so e.g. the
+    ``tracer_off_overhead`` row (disabled-instrumentation cost,
+    ``benchmarks/serving.py``) gates from its very first CI run;
   * anything else (counts, ratios, roofline terms) is informational and
     never gates.
 
-Only rows present in BOTH documents are compared — new benchmarks land
-without a baseline and start gating on the next commit.  A missing or
-unfetchable previous document is a *skip with notice*, exit 0: the gate
-must not brick CI on the first run, on artifact expiry, or on a fork
-without artifact access.
+Relative gates compare only rows present in BOTH documents — new
+benchmarks land without a baseline and start gating on the next commit.
+A missing or unfetchable previous document is a *skip with notice* for
+the relative gates, exit 0 (the gate must not brick CI on the first
+run, on artifact expiry, or on a fork without artifact access); the
+absolute overhead gate still applies.
 """
 from __future__ import annotations
 
@@ -42,8 +48,11 @@ _LATENCY_SUFFIXES = ("_us", "_ms", "_s", "_seconds")
 
 
 def classify(key: str) -> Optional[str]:
-    """'latency' (lower is better), 'speedup' (higher is better), or
-    None (informational, never gates)."""
+    """'latency' (lower is better), 'speedup' (higher is better),
+    'overhead' (absolute ratio, gated against 1 + overhead-threshold),
+    or None (informational, never gates)."""
+    if "overhead" in key:
+        return "overhead"
     if "speedup" in key:
         return "speedup"
     if key.endswith(_LATENCY_SUFFIXES) and "/_suite_" not in key:
@@ -69,6 +78,24 @@ def compare_rows(prev_rows: Dict[str, float], cur_rows: Dict[str, float],
             out.append((key, prev, cur, cur / prev))
         elif kind == "speedup" and cur < prev * (1.0 - threshold):
             out.append((key, prev, cur, prev / max(cur, 1e-12)))
+    return out
+
+
+def check_overhead(cur_rows: Dict[str, float],
+                   overhead_threshold: float = 0.02
+                   ) -> List[Tuple[str, float, float, float]]:
+    """Absolute gate on 'overhead' rows of the CURRENT document: each is
+    already a with/without ratio, so it regresses when it exceeds
+    ``1 + overhead_threshold`` — no baseline involved.  Same row shape
+    as :func:`compare_rows` (key, limit, current, ratio)."""
+    limit = 1.0 + overhead_threshold
+    out = []
+    for key in sorted(cur_rows):
+        if classify(key) != "overhead":
+            continue
+        cur = float(cur_rows[key])
+        if cur > limit:
+            out.append((key, limit, cur, cur / limit))
     return out
 
 
@@ -135,10 +162,19 @@ def main(argv=None) -> int:
                     help="baseline branch (default: main)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="fractional regression tolerance (default 0.25)")
+    ap.add_argument("--overhead-threshold", type=float, default=0.02,
+                    help="absolute tolerance for 'overhead' ratio rows "
+                         "(default 0.02 = 2%%; gated without a baseline)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
         cur = json.load(f)
+
+    # the absolute overhead gate needs no baseline — run it first so a
+    # missing previous document can't skip it
+    overshoots = check_overhead(cur.get("rows", {}),
+                                overhead_threshold=args.overhead_threshold)
+
     prev = None
     if args.previous:
         try:
@@ -149,23 +185,31 @@ def main(argv=None) -> int:
                   file=sys.stderr)
     elif args.fetch_previous:
         prev = fetch_previous(args.artifact_name, branch=args.branch)
-    if prev is None:
-        print("compare: SKIPPED — no previous benchmark document; "
-              "gate passes vacuously")
-        return 0
 
-    shared = set(prev.get("rows", {})) & set(cur.get("rows", {}))
-    gated = [k for k in shared if classify(k)]
-    regressions = compare_rows(prev.get("rows", {}), cur.get("rows", {}),
-                               threshold=args.threshold)
-    print(f"compare: {len(shared)} shared rows, {len(gated)} gated, "
-          f"threshold {args.threshold:.0%}")
-    if not regressions:
+    regressions = []
+    if prev is None:
+        print("compare: relative gates SKIPPED — no previous benchmark "
+              "document (absolute overhead gate still applies)")
+    else:
+        shared = set(prev.get("rows", {})) & set(cur.get("rows", {}))
+        gated = [k for k in shared if classify(k)]
+        regressions = compare_rows(prev.get("rows", {}),
+                                   cur.get("rows", {}),
+                                   threshold=args.threshold)
+        print(f"compare: {len(shared)} shared rows, {len(gated)} gated, "
+              f"threshold {args.threshold:.0%}")
+
+    failures = overshoots + regressions
+    n_over = sum(1 for k in cur.get("rows", {})
+                 if classify(k) == "overhead")
+    print(f"compare: {n_over} overhead row(s) gated absolutely at "
+          f"{1 + args.overhead_threshold:.2f}")
+    if not failures:
         print("compare: OK — no gated row regressed")
         return 0
-    width = max(len(k) for k, *_ in regressions)
-    print(f"compare: {len(regressions)} regression(s):")
-    for key, p, c, ratio in regressions:
+    width = max(len(k) for k, *_ in failures)
+    print(f"compare: {len(failures)} regression(s):")
+    for key, p, c, ratio in failures:
         print(f"  {key:<{width}}  {p:12.2f} -> {c:12.2f}   "
               f"{ratio:5.2f}x worse")
     return 1

@@ -41,6 +41,18 @@ def _rows_roofline():
     return rows
 
 
+def expand_row(key, val):
+    """A suite row's value is usually a number; it may also be a
+    ``QueryStats`` (one merged work record for the whole run — see
+    ``QueryStats.merge``), which expands into one sub-row per numeric
+    field via ``as_dict()`` so every stats field rides the same JSON
+    document without hand-formatting."""
+    if hasattr(val, "as_dict"):
+        return [(f"{key}/{k}", v) for k, v in val.as_dict().items()
+                if isinstance(v, (int, float))]
+    return [(key, val)]
+
+
 SUITES = {
     "space": lambda: __import__("benchmarks.space", fromlist=["run"]).run(),
     "query_time": lambda: __import__("benchmarks.query_time",
@@ -84,12 +96,13 @@ def main() -> None:
             print(f"{name}/ERROR,,{type(e).__name__}:{e}")
             doc["suites"][name] = {"error": f"{type(e).__name__}:{e}"}
             continue
-        for key, val in rows:
-            doc["rows"][key] = float(val)
-            if key.endswith("_us"):
-                print(f"{key},{val:.2f},")
-            else:
-                print(f"{key},,{val}")
+        for raw_key, raw_val in rows:
+            for key, val in expand_row(raw_key, raw_val):
+                doc["rows"][key] = float(val)
+                if key.endswith("_us"):
+                    print(f"{key},{val:.2f},")
+                else:
+                    print(f"{key},,{val}")
         dt = time.time() - t0
         doc["suites"][name] = {"seconds": round(dt, 2)}
         print(f"{name}/_suite_seconds,,{dt:.1f}", flush=True)

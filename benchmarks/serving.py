@@ -28,11 +28,30 @@ slot p99, higher is better):
     serving/<engine>/qps<q>/bucket_p99_ms
     serving/<engine>/qps<q>/p99_speedup
 
+Per-phase latency attribution (from the tickets' ``QueryStats``; the
+split the end-to-end percentiles can't show — where a slow p99 went):
+
+    serving/<engine>/qps<q>/slot_queue_wait_p50_ms   (and _p99_ms)
+    serving/<engine>/qps<q>/slot_service_p50_ms      (and _p99_ms)
+
+Instrumentation overhead (ratio, gated < 1.02 by benchmarks/compare.py):
+
+    serving/<engine>/tracer_off_overhead
+
+— mean burst slot latency with the tracer disabled (the production
+default: every span call site is one global read + branch) over the
+same with the call sites hard-bypassed (``repro.obs.trace.bypass()``,
+the closest runtime stand-in for deleting the instrumentation).
+
 ``--smoke`` / BENCH_SMOKE=1 shrinks the fixture and trace for CI.
+``--trace PATH`` / ``--metrics PATH`` additionally run a small traced
+demo over BOTH engines and export the Chrome trace-event JSON and a
+Prometheus metrics snapshot (the CI serving job uploads both).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -73,7 +92,9 @@ def _arrivals(n, qps, rng):
 
 def _run_slot(eng, queries, arrivals, max_slots=8):
     """Serve the trace through the slot scheduler; per-request latency =
-    ticket completion - scheduled arrival (includes queueing)."""
+    ticket completion - scheduled arrival (includes queueing).  Returns
+    (latencies, settled tickets) — the tickets carry the per-phase
+    attribution (``stats.queue_wait_s`` / ``service_s``)."""
     from repro.core.scheduler import SlotScheduler
     sched = SlotScheduler(eng, max_slots=max_slots,
                           max_queue=len(queries) + 1)
@@ -93,7 +114,7 @@ def _run_slot(eng, queries, arrivals, max_slots=8):
             time.sleep(max(0.0, arrivals[i] - (time.monotonic() - t0)))
     for j in range(n):
         lat[j] = tickets[j].finished_at - t0 - arrivals[j]
-    return lat
+    return lat, tickets
 
 
 def _run_bucket(eng, queries, arrivals, max_batch=32, max_wait_s=0.004):
@@ -135,6 +156,61 @@ def _pct(lat, q):
     return sorted(lat)[min(len(lat) - 1, int(q * len(lat)))]
 
 
+def _tracer_off_overhead(eng, queries, reps=2):
+    """Price the disabled instrumentation: mean burst slot latency with
+    the module tracer off (production default — every span call site is
+    a global read + branch returning NULL_SPAN) over the same run with
+    the call sites hard-bypassed.  Interleaved best-of-``reps`` per mode
+    on the same warmed engine, so system noise hits both modes alike."""
+    from repro.obs import trace as otrace
+    burst = [0.0] * len(queries)
+
+    def mean_lat(ctx):
+        with ctx:
+            eng.results.clear()
+            lat, _ = _run_slot(eng, queries, burst)
+        return sum(lat) / len(lat)
+
+    off, byp = [], []
+    for _ in range(reps):
+        off.append(mean_lat(contextlib.nullcontext()))
+        byp.append(mean_lat(otrace.bypass()))
+    return min(off) / max(min(byp), 1e-9)
+
+
+def _traced_demo(trace_path, metrics_path):
+    """A tiny traced serving run over BOTH engines: exports the Chrome
+    trace-event JSON (admission/superstep/retire spans for ring AND
+    dense) and the dense scheduler's Prometheus snapshot — the CI
+    serving job's observability artifacts."""
+    from repro.core.engines import make_engine
+    from repro.core.fixtures import scale_free_graph
+    from repro.core.scheduler import SlotScheduler
+    from repro.obs import trace as otrace
+
+    g = scale_free_graph(120, 8, 960, seed=23)
+    queries = _workload(g, 8, np.random.default_rng(5))
+    tr = otrace.Tracer()
+    tr.enable()
+    prom = ""
+    with otrace.use(tr):
+        for kind in ("ring", "dense"):
+            eng = make_engine(g, kind)
+            sched = SlotScheduler(eng, max_slots=4)
+            for q in queries:
+                sched.submit(q)
+            sched.drain()
+            prom = sched.prometheus_text()
+    if trace_path:
+        tr.export(trace_path)
+        print(f"wrote {trace_path} ({len(tr.events)} events)",
+              file=sys.stderr)
+    if metrics_path:
+        with open(metrics_path, "w") as f:
+            f.write(prom)
+        print(f"wrote {metrics_path}", file=sys.stderr)
+
+
 # per-engine scale: offered QPS must sit below the engine's service
 # capacity (an open-loop trace above capacity measures queue drain, not
 # scheduling) — the ring's host-side bit-parallel traversal serves ~2
@@ -159,9 +235,11 @@ def run():
         n = cfg["n"]
         g = scale_free_graph(cfg["V"], 8, cfg["E"], seed=23)
         queries = _workload(g, n, np.random.default_rng(3))
+        overhead_eng = None
         for qps in cfg["qps"]:
             arrivals = _arrivals(n, qps, np.random.default_rng(17))
             per_mode = {}
+            slot_tickets = []
             for mode, runner in (("slot", _run_slot),
                                  ("bucket", _run_bucket)):
                 # fresh engine per mode: identical compile/cache state,
@@ -180,7 +258,12 @@ def run():
                     eng.eval_many(queries[:k])
                     k *= 2
                 eng.results.clear()
-                per_mode[mode] = runner(eng, queries, arrivals)
+                out = runner(eng, queries, arrivals)
+                if mode == "slot":
+                    per_mode[mode], slot_tickets = out
+                    overhead_eng = eng   # warmed + slot-shaped: reuse below
+                else:
+                    per_mode[mode] = out
             tag = f"serving/{kind}/qps{qps}"
             for mode, lat in per_mode.items():
                 rows.append((f"{tag}/{mode}_p50_ms", _pct(lat, 0.50) * 1e3))
@@ -188,6 +271,17 @@ def run():
             rows.append((f"{tag}/p99_speedup",
                          _pct(per_mode["bucket"], 0.99)
                          / max(_pct(per_mode["slot"], 0.99), 1e-9)))
+            # per-phase attribution: where a request's end-to-end
+            # latency went (queue wait vs in-slot service)
+            for phase in ("queue_wait", "service"):
+                vals = [getattr(t.stats, f"{phase}_s") for t in slot_tickets]
+                rows.append((f"{tag}/slot_{phase}_p50_ms",
+                             _pct(vals, 0.50) * 1e3))
+                rows.append((f"{tag}/slot_{phase}_p99_ms",
+                             _pct(vals, 0.99) * 1e3))
+        if overhead_eng is not None:
+            rows.append((f"serving/{kind}/tracer_off_overhead",
+                         _tracer_off_overhead(overhead_eng, queries)))
     return rows
 
 
@@ -198,9 +292,17 @@ def main() -> None:
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write rows as a JSON document (the shape "
                          "benchmarks/run.py emits, for benchmarks/compare.py)")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="run a small traced demo over both engines and "
+                         "export Chrome trace-event JSON to PATH")
+    ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
+                    help="write the traced demo's Prometheus metrics "
+                         "snapshot to PATH")
     args = ap.parse_args()
     if args.smoke:
         os.environ["BENCH_SMOKE"] = "1"
+    if args.trace or args.metrics:
+        _traced_demo(args.trace, args.metrics)
     doc = {"smoke": bool(args.smoke), "suites": {}, "rows": {}}
     print("name,us_per_call,derived")
     t0 = time.time()

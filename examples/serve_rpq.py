@@ -43,6 +43,10 @@ _ap.add_argument("--force-host-devices", type=int, default=None,
                       "jax imports, hence an argument of this script)")
 _ap.add_argument("--slots", type=int, default=8,
                  help="in-flight slot pool size")
+_ap.add_argument("--trace", default=None, metavar="PATH",
+                 help="enable the obs span tracer for the timed waves and "
+                      "export Chrome trace-event JSON to PATH (open in "
+                      "Perfetto / chrome://tracing)")
 ARGS = _ap.parse_args()
 if ARGS.force_host_devices:
     # per-flag setdefault (repro.launch.env imports no jax): appending to
@@ -53,23 +57,26 @@ if ARGS.force_host_devices:
 
 import numpy as np
 
-from repro.core.engines import Query, make_engine
+from repro import obs
+from repro.core.engines import Query, QueryStats, make_engine
 from repro.core.fixtures import scale_free_graph
 from repro.core.scheduler import AsyncServer, SlotScheduler
 
 
 async def _serve_wave(server: AsyncServer, queries, stagger_s: float):
     """Submit ``queries`` as a trickle-then-burst arrival pattern and
-    await every final answer; returns (answers, per-request latencies)."""
+    await every final answer; returns (answers, per-request latencies,
+    settled tickets)."""
     async def one(i, q):
         await asyncio.sleep((i % 8) * stagger_s)   # 8 staggered arrival slots
         t0 = time.monotonic()
         ticket = await server.submit(q)
         ans = await ticket.result()
-        return ans, time.monotonic() - t0
+        return ans, time.monotonic() - t0, ticket.ticket
 
     out = await asyncio.gather(*(one(i, q) for i, q in enumerate(queries)))
-    return [a for a, _ in out], [lat for _, lat in out]
+    return ([a for a, _, _ in out], [lat for _, lat, _ in out],
+            [t for _, _, t in out])
 
 
 def _p(lat, q):
@@ -100,29 +107,47 @@ def main():
         warm.submit(q)
     warm.drain()
     eng.results.clear()
-    # report deltas over the warm-up's counters, not cumulative totals
-    plan_h0, plan_m0 = eng.plans.hits, eng.plans.misses
-    hetero0 = eng.hetero_dispatches
 
+    if ARGS.trace:
+        # trace the timed waves only — warm-up compilation would bury
+        # the serving spans
+        obs.trace.TRACER.enable()
+
+    # the timed wave also exercises the Prometheus endpoint: the
+    # AsyncServer binds a free port (metrics_port=0) and we scrape it
+    # over plain HTTP once the wave settles
     sched = SlotScheduler(eng, max_slots=ARGS.slots)
     t0 = time.time()
-    answers, lat = asyncio.run(_run_wave(sched, queries, stagger_s=0.002))
+    answers, lat, tickets, scraped = asyncio.run(
+        _run_wave(sched, queries, stagger_s=0.002, metrics_port=0))
     dt = time.time() - t0
     print(f"served {len(queries)} RPQ requests ({len(exprs)} mixed exprs) "
           f"through {ARGS.slots} continuous-batching slots: "
           f"{dt*1e3:.1f} ms total, p50 {_p(lat, 0.50):.2f} / "
           f"p99 {_p(lat, 0.99):.2f} ms request latency")
-    print(f"scheduler: {sched.admitted} admitted, peak {sched.peak_in_flight} "
-          f"in flight, {sched.streamed_pairs} pairs streamed incrementally; "
-          f"plan cache: {eng.plans.hits - plan_h0} hits / "
-          f"{eng.plans.misses - plan_m0} misses; hetero BFS dispatches: "
-          f"{eng.hetero_dispatches - hetero0}")
+
+    # per-phase latency attribution, merged over every settled ticket
+    # (one formatting path: QueryStats.merge + as_dict)
+    d = QueryStats.merge(t.stats for t in tickets).as_dict()
+    n = len(tickets)
+    print(f"latency attribution over {n} tickets (mean/request): "
+          f"queue wait {d['queue_wait_s']/n*1e3:.2f} ms, "
+          f"service {d['service_s']/n*1e3:.2f} ms, "
+          f"superstep dispatch {d['supersteps_s']/n*1e3:.2f} ms; "
+          f"plan modes {d['plan_mode'] or 'n/a'}, "
+          f"{d['results']} result pairs")
+
+    print("scheduler metrics, scraped from the AsyncServer endpoint "
+          "(Prometheus text exposition):")
+    body = scraped.split("\r\n\r\n", 1)[1]
+    print("\n".join(line for line in body.splitlines()
+                    if line and not line.startswith("#")))
 
     # replay the exact stream: every answer comes from the result cache
     res_h0, res_m0 = eng.results.hits, eng.results.misses
     sched2 = SlotScheduler(eng, max_slots=ARGS.slots)
     t0 = time.time()
-    replay, _ = asyncio.run(_run_wave(sched2, queries, stagger_s=0.0))
+    replay, _, _, _ = asyncio.run(_run_wave(sched2, queries, stagger_s=0.0))
     dt_replay = time.time() - t0
     assert replay == answers
     print(f"replayed the stream from the result cache: "
@@ -205,10 +230,26 @@ def main():
     assert fresh == want
     print("final-epoch answers match a from-scratch rebuild: ok.")
 
+    if ARGS.trace:
+        tr = obs.trace.TRACER
+        tr.export(ARGS.trace)
+        print(f"exported {len(tr.events)} trace events to {ARGS.trace} "
+              f"(load in https://ui.perfetto.dev)")
 
-async def _run_wave(sched: SlotScheduler, queries, stagger_s: float):
-    async with AsyncServer(sched) as server:
-        return await _serve_wave(server, queries, stagger_s)
+
+async def _run_wave(sched: SlotScheduler, queries, stagger_s: float,
+                    metrics_port=None):
+    async with AsyncServer(sched, metrics_port=metrics_port) as server:
+        answers, lat, tickets = await _serve_wave(server, queries, stagger_s)
+        scraped = None
+        if metrics_port is not None:
+            host, port = server.metrics_addr
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write(b"GET /metrics HTTP/1.0\r\n\r\n")
+            await writer.drain()
+            scraped = (await reader.read()).decode()
+            writer.close()
+        return answers, lat, tickets, scraped
 
 
 if __name__ == "__main__":

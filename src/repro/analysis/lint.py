@@ -1,6 +1,6 @@
 """Repo-specific AST lint rules (layer 2 of the static analyzer).
 
-Five rules encode invariants that ordinary linters cannot see because
+Six rules encode invariants that ordinary linters cannot see because
 they are about *this* codebase's determinism and device-dispatch
 contracts:
 
@@ -28,6 +28,12 @@ R005  engine mutation bypassing the delta overlay router: all edge
       add/remove paths outside ``core/delta.py`` must go through
       ``delta.apply_engine_updates`` — direct overlay mutation skips
       epoch bumps and cache invalidation.
+R006  raw wall-clock reads (``time.perf_counter()`` /
+      ``time.monotonic()``) inside an engine/scheduler superstep loop
+      (``src/repro/core/`` only): ad-hoc timing there is invisible to
+      the obs layer — route it through ``repro.obs.trace.span(...)``
+      (attributable, exportable, free when disabled) or the scheduler's
+      injectable ``clock``.
 
 Findings can be suppressed inline with ``# repro: noqa R00X`` on the
 flagged line (justification after an em-dash is encouraged), or
@@ -49,6 +55,7 @@ DEFAULT_LINT_DIRS = (
     "src/repro/core",
     "src/repro/kernels",
     "src/repro/analysis",
+    "src/repro/obs",
     "examples",
     "benchmarks",
 )
@@ -512,10 +519,55 @@ def _rule_r005(tree: ast.Module, rel: str,
 
 
 # ---------------------------------------------------------------------
+# R006: raw wall-clock reads inside superstep loops (core/ only)
+# ---------------------------------------------------------------------
+
+_RAW_TIMING_FUNCS = {"perf_counter", "monotonic"}
+_TIME_MODULE_NAMES = {"time", "_time"}
+
+
+def _is_raw_timing_call(call: ast.Call) -> bool:
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        return (func.attr in _RAW_TIMING_FUNCS
+                and isinstance(func.value, ast.Name)
+                and func.value.id in _TIME_MODULE_NAMES)
+    if isinstance(func, ast.Name):
+        return func.id in _RAW_TIMING_FUNCS
+    return False
+
+
+def _rule_r006(tree: ast.Module, rel: str,
+               lines: Sequence[str]) -> Iterable[Finding]:
+    # engine/scheduler internals only — benchmarks and examples time
+    # end-to-end wall clock by design
+    if not rel.replace("\\", "/").startswith("src/repro/core/"):
+        return
+    hint = ("wrap the timed region in repro.obs.trace.span(...) — "
+            "attributable, Chrome-trace exportable, and free when "
+            "disabled — or use the scheduler's injectable clock")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.While):
+            continue
+        body_calls = [c for stmt in node.body for c in ast.walk(stmt)
+                      if isinstance(c, ast.Call)]
+        if not any(_is_dispatch_name(_call_name(c.func)) for c in body_calls):
+            continue
+        for call in body_calls:
+            if _is_raw_timing_call(call):
+                yield Finding(rel, call.lineno, "R006",
+                              f"raw time.{_call_name(call.func)}() inside a "
+                              "superstep loop — ad-hoc timing invisible to "
+                              "the obs tracer",
+                              hint, _snippet(lines, call.lineno))
+
+
+# ---------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------
 
-_PER_FILE_RULES = (_rule_r001, _rule_r002, _rule_r004, _rule_r005)
+_PER_FILE_RULES = (_rule_r001, _rule_r002, _rule_r004, _rule_r005,
+                   _rule_r006)
 
 
 def lint_file(path: Path, rel: str) -> List[Finding]:

@@ -48,6 +48,8 @@ from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..obs import trace as otrace
+
 Triple = Tuple[int, int, int]
 
 
@@ -452,18 +454,20 @@ def apply_engine_updates(engine, add=None, remove=None) -> int:
     engine rewire its physical structures, and compact when the overlay
     outgrows the threshold.  Returns the new epoch."""
     ov = engine._ensure_overlay()
-    mutated = ov.apply(add, remove)
-    if mutated:
-        engine.results.invalidate_preds(mutated)
-        engine.decisions.invalidate_preds(mutated)
-        engine._on_overlay_change(mutated)
-        if engine._stats is not None:
-            completed = sorted({p for m in mutated
-                                for p in (m, m + ov.num_preds)})
-            engine._stats.refresh_preds(completed, engine._pred_edges)
-        if engine.compact_threshold is not None \
-                and ov.size >= engine.compact_threshold:
-            engine.compact()
+    with otrace.span("updates.apply", cat="updates") as sp:
+        mutated = ov.apply(add, remove)
+        if mutated:
+            engine.results.invalidate_preds(mutated)
+            engine.decisions.invalidate_preds(mutated)
+            engine._on_overlay_change(mutated)
+            if engine._stats is not None:
+                completed = sorted({p for m in mutated
+                                    for p in (m, m + ov.num_preds)})
+                engine._stats.refresh_preds(completed, engine._pred_edges)
+            if engine.compact_threshold is not None \
+                    and ov.size >= engine.compact_threshold:
+                engine.compact()
+        sp.set(preds=len(mutated), epoch=ov.epoch)
     return ov.epoch
 
 

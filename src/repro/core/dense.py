@@ -69,6 +69,7 @@ import numpy as np
 from . import delta as dl
 from . import planner as qp
 from . import regex as rx
+from ..obs import trace as otrace
 from .engines import (PlanCache, QueryLike, QueryStats, ResultCache,
                       TraceTracker, as_query, normalized_key,
                       probe_result_cache, publish_result, truncate_result)
@@ -1072,34 +1073,38 @@ class DenseStepper:
             if slot.active:
                 key = (tuple(id(a) for a in slot.edges), slot.S_pad)
                 groups.setdefault(key, []).append(slot)
-        for (_ids, S_pad), members in groups.items():
-            C = 4
-            while C < len(members):
-                C *= 2
-            Bstk = np.zeros((C, L + 1, S_pad), dtype=np.int8)
-            PREDstk = np.zeros((C, S_pad, S_pad), dtype=np.int8)
-            front = np.zeros((C, V, S_pad), dtype=np.int8)
-            vis = np.zeros((C, V, S_pad), dtype=np.int8)
-            for r, slot in enumerate(members):
-                S = slot.plan.g.m + 1
-                B_host, PRED_host = slot.plan.host_tables()
-                Bstk[r, :, :S] = B_host
-                PREDstk[r, :S, :S] = PRED_host
-                front[r] = slot.frontier
-                vis[r] = slot.visited
-            subj, pred, obj = members[0].edges
-            eng.traces.record("bfs_chunk_hetero", C, S_pad)
-            f, v, it = _bfs_chunk_hetero(
-                subj, pred, obj, jnp.asarray(Bstk), jnp.asarray(PREDstk),
-                jnp.asarray(front), jnp.asarray(vis), V,
-                self.steps_per_tick)
-            eng.hetero_dispatches += 1
-            eng._superstep_acc += int(it)
-            f = np.asarray(f)
-            v = np.asarray(v)
-            for r, slot in enumerate(members):
-                slot.frontier = f[r]
-                slot.visited = v[r]
-                if not f[r].any():
-                    slot.active = False
+        with otrace.span("dense.superstep", cat="engine",
+                         slots=len(self.slots), groups=len(groups)):
+            for (_ids, S_pad), members in groups.items():
+                C = 4
+                while C < len(members):
+                    C *= 2
+                Bstk = np.zeros((C, L + 1, S_pad), dtype=np.int8)
+                PREDstk = np.zeros((C, S_pad, S_pad), dtype=np.int8)
+                front = np.zeros((C, V, S_pad), dtype=np.int8)
+                vis = np.zeros((C, V, S_pad), dtype=np.int8)
+                for r, slot in enumerate(members):
+                    S = slot.plan.g.m + 1
+                    B_host, PRED_host = slot.plan.host_tables()
+                    Bstk[r, :, :S] = B_host
+                    PREDstk[r, :S, :S] = PRED_host
+                    front[r] = slot.frontier
+                    vis[r] = slot.visited
+                subj, pred, obj = members[0].edges
+                eng.traces.record("bfs_chunk_hetero", C, S_pad)
+                with otrace.span("dense.bfs_chunk", cat="kernel",
+                                 rows=C, width=S_pad, live=len(members)):
+                    f, v, it = _bfs_chunk_hetero(
+                        subj, pred, obj, jnp.asarray(Bstk),
+                        jnp.asarray(PREDstk), jnp.asarray(front),
+                        jnp.asarray(vis), V, self.steps_per_tick)
+                    eng.hetero_dispatches += 1
+                    eng._superstep_acc += int(it)
+                    f = np.asarray(f)
+                    v = np.asarray(v)
+                for r, slot in enumerate(members):
+                    slot.frontier = f[r]
+                    slot.visited = v[r]
+                    if not f[r].any():
+                        slot.active = False
         return any(s.active for s in self.slots)

@@ -32,10 +32,12 @@ plan id, stepped through a single block-diagonal ``nfa_step`` batch).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
+from dataclasses import dataclass, field, fields
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Set, Tuple, Union)
 
 from . import regex as rx
+from ..obs import trace as otrace
 
 
 @dataclass(frozen=True)
@@ -143,6 +145,42 @@ class QueryStats:
     # means the padding/bucketing scheme is leaking shapes (the runtime
     # view of the trace audit's retrace budget — repro.analysis).
     retraces: int = 0
+    # latency attribution (scheduler-clock seconds, filled by
+    # SlotScheduler): queue wait (submit -> slot admission), service
+    # (admission -> settle), and the wall time the ticket's slot spent
+    # inside superstep dispatch.  queue_wait_s + service_s equals the
+    # end-to-end latency of a settled ticket.
+    queue_wait_s: float = 0.0
+    service_s: float = 0.0
+    supersteps_s: float = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        """Field-name -> value dict (JSON-able) — the one formatting
+        path for benchmark rows and serving summaries."""
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    @staticmethod
+    def merge(stats: Iterable["QueryStats"]) -> "QueryStats":
+        """Aggregate many per-query stats into one workload-level record:
+        numeric fields sum, ``epoch`` and the plan decision fields keep
+        the maximum seen (sums of ids/modes are meaningless)."""
+        out = QueryStats()
+        keep_max = {"epoch", "plan_split_pred", "plan_est_cost",
+                    "plan_est_frontier"}
+        modes: Set[str] = set()
+        for s in stats:
+            for f in fields(QueryStats):
+                if f.name == "plan_mode":
+                    if s.plan_mode:
+                        modes.add(s.plan_mode)
+                    continue
+                v = getattr(s, f.name)
+                if f.name in keep_max:
+                    setattr(out, f.name, max(getattr(out, f.name), v))
+                else:
+                    setattr(out, f.name, getattr(out, f.name) + v)
+        out.plan_mode = "+".join(sorted(modes))
+        return out
 
 
 class TraceTracker:
@@ -444,17 +482,20 @@ def probe_result_cache(
     pending entry.  ``on_hit``/``on_miss`` let the ring engine surface
     per-query cache counters in its stats rows."""
     pending: Dict[Tuple, List[int]] = {}
-    for idx, q in enumerate(queries):
-        key = result_key(q)
-        cached = cache.get_covering(key)
-        if cached is not None:
-            results[idx] = set(cached)
-            if on_hit is not None:
-                on_hit(idx, cached)
-        else:
-            pending.setdefault(key, []).append(idx)
-            if on_miss is not None:
-                on_miss(idx)
+    with otrace.span("cache.probe", cat="cache",
+                     queries=len(queries)) as sp:
+        for idx, q in enumerate(queries):
+            key = result_key(q)
+            cached = cache.get_covering(key)
+            if cached is not None:
+                results[idx] = set(cached)
+                if on_hit is not None:
+                    on_hit(idx, cached)
+            else:
+                pending.setdefault(key, []).append(idx)
+                if on_miss is not None:
+                    on_miss(idx)
+        sp.set(misses=len(pending))
     return pending
 
 

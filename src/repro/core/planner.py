@@ -47,6 +47,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Set
 import numpy as np
 
 from . import regex as rx
+from ..obs import trace as otrace
 from .stats import GraphStats
 
 
@@ -332,10 +333,13 @@ def decide(ast: rx.Node, subject_bound: bool, obj_bound: bool, *,
     else:
         from .engines import decision_key
         key = decision_key(ast, subject_bound, obj_bound, policy)
-        plan = decisions.get(key, lambda: choose_plan(
-            ast, subject_bound, obj_bound, stats_provider(), resolve,
-            policy, unanchored_margin=unanchored_margin),
-            footprint=footprint)
+        with otrace.span("planner.decide", cat="planner",
+                         policy=policy) as sp:
+            plan = decisions.get(key, lambda: choose_plan(
+                ast, subject_bound, obj_bound, stats_provider(), resolve,
+                policy, unanchored_margin=unanchored_margin),
+                footprint=footprint)
+            sp.set(mode=plan.mode)
     if record is not None:
         record.plan_mode = plan.mode
         record.plan_split_pred = plan.split_pred

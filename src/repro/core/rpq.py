@@ -85,6 +85,7 @@ import numpy as np
 from . import delta as dl
 from . import planner as qp
 from . import regex as rx
+from ..obs import trace as otrace
 from .engines import (PlanBundle, PlanCache, QueryLike, QueryStats,
                       ResultCache, TraceTracker, as_query, normalized_key,
                       probe_result_cache, publish_result, truncate_result)
@@ -772,7 +773,9 @@ class RingRPQ(dl.LiveUpdateEngine):
         from ..kernels import ops
         if self.mesh is None:
             self.traces.record("nfa_step", X.shape[0], X.shape[1])
-            return np.asarray(ops.nfa_step(X, bwd))
+            with otrace.span("ring.nfa_step", cat="kernel",
+                             tasks=int(X.shape[0]), words=int(X.shape[1])):
+                return np.asarray(ops.nfa_step(X, bwd))
         if self._task_step is None:
             from .distributed import make_task_shard_step
             self._task_step = make_task_shard_step(self.mesh, self.data_axes)
@@ -793,7 +796,12 @@ class RingRPQ(dl.LiveUpdateEngine):
         Xp = np.zeros((per * n, X.shape[1]), dtype=np.uint32)
         Xp[:N] = X
         self.traces.record("task_shard_step", per * n, X.shape[1])
-        Y = np.asarray(self._task_step(Xp, cached[1]))
+        with otrace.span("ring.task_shard_step", cat="kernel",
+                         tasks=per * n, words=int(X.shape[1]),
+                         shards=n):
+            # the device round-trip inside this span covers the all-gather
+            # merge back to the host replica
+            Y = np.asarray(self._task_step(Xp, cached[1]))
         self.sharded_kernel_batches += 1
         return Y[:N]
 
@@ -1008,9 +1016,14 @@ class RingStepper:
         every queued entry; ``False`` steps a single entry (the
         sequential reference).  Returns True while frontier entries
         remain queued."""
-        rpq = self.rpq
         if not self.queue:
             return False
+        with otrace.span("ring.superstep", cat="engine",
+                         entries=len(self.queue), jobs=len(self.jobs)):
+            return self._step_impl(deadline)
+
+    def _step_impl(self, deadline: Optional[float] = None) -> bool:
+        rpq = self.rpq
         if rpq.wavefront:
             chunk = list(self.queue)
             self.queue.clear()

@@ -66,6 +66,8 @@ from . import delta as dl
 from . import regex as rx
 from .engines import (Query, QueryLike, QueryStats, as_query, result_key,
                       truncate_result)
+from ..obs import trace as otrace
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["Backpressure", "QueryTicket", "SlotScheduler", "AsyncServer"]
 
@@ -84,16 +86,23 @@ class QueryTicket:
     answer set once ``done`` — or raises the query's failure
     (``TimeoutError`` on deadline preemption).  ``epoch`` is the graph
     epoch the answer is exact at, pinned at slot admission.
+
+    Latency attribution (scheduler-clock seconds, recorded in
+    ``stats``): ``queue_wait_s`` (submit -> admission),
+    ``service_s`` (admission -> settle), ``supersteps_s`` (wall time
+    the ticket's slot spent inside superstep dispatch).  For a settled
+    ticket ``queue_wait_s + service_s == finished_at - submitted_at``.
     """
 
-    __slots__ = ("query", "submitted_at", "deadline", "epoch", "state",
-                 "finished_at", "stats", "_result", "_error", "_stream",
-                 "_emitted")
+    __slots__ = ("query", "submitted_at", "admitted_at", "deadline",
+                 "epoch", "state", "finished_at", "stats", "_result",
+                 "_error", "_stream", "_emitted")
 
     def __init__(self, query: Query, submitted_at: float,
                  deadline: Optional[float]):
         self.query = query
         self.submitted_at = submitted_at
+        self.admitted_at: Optional[float] = None
         self.deadline = deadline
         self.epoch: Optional[int] = None
         self.state = "queued"            # queued | running | done | failed
@@ -232,11 +241,22 @@ class SlotScheduler:
 
     def __init__(self, engine, max_slots: int = 8, max_queue: int = 256,
                  steps_per_tick: int = 1,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None):
         self.engine = engine
         self.max_slots = int(max_slots)
         self.max_queue = int(max_queue)
         self.clock = clock
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._hist_queue_wait = self.metrics.histogram(
+            "rpq_queue_wait_seconds", "submit -> slot admission")
+        self._hist_service = self.metrics.histogram(
+            "rpq_service_seconds", "admission -> settle")
+        self._hist_e2e = self.metrics.histogram(
+            "rpq_e2e_seconds", "submit -> settle")
+        self._hist_preempt_wait = self.metrics.histogram(
+            "rpq_preempted_queue_wait_seconds",
+            "queue wait paid by deadline-preempted queries")
         if hasattr(engine, "ring"):
             self.slots: Any = _RingSlots(engine)
         elif hasattr(engine, "dg"):
@@ -294,12 +314,24 @@ class SlotScheduler:
         waiting queue into free slots, advance the wavefront by one
         superstep, harvest newly-converged slots.  Returns True while
         any query is in flight or waiting."""
-        now = self.clock()
-        self._expire(now)
-        self._admit(now)
-        if self.active:
-            self.slots.step()
-            self._harvest()
+        if not (self.active or self.waiting):
+            return False
+        with otrace.span("scheduler.tick", cat="scheduler",
+                         active=len(self.active), waiting=len(self.waiting)):
+            now = self.clock()
+            self._expire(now)
+            self._admit(now)
+            if self.active:
+                with otrace.span("scheduler.superstep", cat="scheduler",
+                                 slots=len(self.active)):
+                    t0 = self.clock()
+                    self.slots.step()
+                    dt = self.clock() - t0
+                # wall time inside superstep dispatch, attributed to every
+                # ticket that occupied a slot during it
+                for a in self.active:
+                    a.ticket.stats.supersteps_s += dt
+                self._harvest()
         return bool(self.active or self.waiting)
 
     def drain(self) -> None:
@@ -314,49 +346,99 @@ class SlotScheduler:
     def pending(self) -> bool:
         return bool(self.active or self.waiting)
 
+    # -- metrics -------------------------------------------------------------
+    def _sync_metrics(self) -> None:
+        # the int attributes stay authoritative (cheap, test-friendly);
+        # the registry mirrors them on demand so exports see one source
+        m = self.metrics
+        for name in ("submitted", "admitted", "completed", "preempted",
+                     "rejected", "cache_hits", "delegated", "updates",
+                     "streamed_pairs"):
+            m.counter(f"rpq_{name}_total",
+                      f"scheduler {name} count").value = getattr(self, name)
+        m.gauge("rpq_in_flight", "occupied slots").set(len(self.active))
+        m.gauge("rpq_waiting", "admission queue depth").set(len(self.waiting))
+        m.gauge("rpq_peak_in_flight",
+                "high-water occupied slots").set(self.peak_in_flight)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-able registry snapshot (see
+        :meth:`repro.obs.metrics.MetricsRegistry.snapshot`)."""
+        self._sync_metrics()
+        return self.metrics.snapshot()
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the scheduler's metrics."""
+        self._sync_metrics()
+        return self.metrics.to_prometheus()
+
     # -- internals -----------------------------------------------------------
     def _fail(self, ticket: QueryTicket, err: BaseException) -> None:
         ticket._error = err
         ticket.state = "failed"
         ticket.finished_at = self.clock()
+        if ticket.admitted_at is not None:
+            ticket.stats.service_s = ticket.finished_at - ticket.admitted_at
+
+    def _settle_stats(self, ticket: QueryTicket) -> None:
+        if ticket.admitted_at is not None:
+            ticket.stats.service_s = ticket.finished_at - ticket.admitted_at
+            self._hist_service.observe(ticket.stats.service_s)
+        self._hist_e2e.observe(ticket.finished_at - ticket.submitted_at)
 
     def _finish(self, ticket: QueryTicket, out: Set[Tuple[int, int]],
                 key: Tuple, footprint: frozenset) -> None:
-        q = ticket.query
-        ticket.stats.results = len(out)
-        out = truncate_result(out, q.limit)
-        if q.limit is None:
-            self.streamed_pairs += ticket._emit(out)
-        self.engine.results.put(key, out, footprint=footprint,
-                                epoch=ticket.epoch or 0)
-        ticket._result = out
-        ticket.state = "done"
-        ticket.finished_at = self.clock()
-        self.completed += 1
+        with otrace.span("scheduler.retire", cat="scheduler",
+                         expr=ticket.query.expr, results=len(out)):
+            q = ticket.query
+            ticket.stats.results = len(out)
+            out = truncate_result(out, q.limit)
+            if q.limit is None:
+                self.streamed_pairs += ticket._emit(out)
+            self.engine.results.put(key, out, footprint=footprint,
+                                    epoch=ticket.epoch or 0)
+            ticket._result = out
+            ticket.state = "done"
+            ticket.finished_at = self.clock()
+            self._settle_stats(ticket)
+            self.completed += 1
 
     def _expire(self, now: float) -> None:
         for ticket in [t for t in self.waiting
-                       if t.deadline is not None and now > t.deadline]:
+                       if t.deadline is not None and now >= t.deadline]:
             self.waiting.remove(ticket)
-            self._fail(ticket, TimeoutError("query deadline exceeded"))
+            with otrace.span("scheduler.preempt", cat="scheduler",
+                             where="queued", expr=ticket.query.expr):
+                ticket.stats.queue_wait_s = now - ticket.submitted_at
+                self._hist_preempt_wait.observe(ticket.stats.queue_wait_s)
+                self._fail(ticket, TimeoutError("query deadline exceeded"))
             self.preempted += 1
         for a in [a for a in self.active
                   if a.ticket.deadline is not None
-                  and now > a.ticket.deadline]:
+                  and now >= a.ticket.deadline]:
             # deadline-aware preemption: the slot frees THIS tick, so
             # the stragglers behind it stop paying for the monster query
-            self.slots.release(a.handle)
-            self.active.remove(a)
-            self._fail(a.ticket, TimeoutError("query deadline exceeded"))
+            with otrace.span("scheduler.preempt", cat="scheduler",
+                             where="running", expr=a.ticket.query.expr):
+                self.slots.release(a.handle)
+                self.active.remove(a)
+                self._hist_preempt_wait.observe(a.ticket.stats.queue_wait_s)
+                self._fail(a.ticket, TimeoutError("query deadline exceeded"))
             self.preempted += 1
 
     def _admit(self, now: float) -> None:
         while self.waiting and len(self.active) < self.max_slots:
             ticket = self.waiting.popleft()
-            try:
-                self._admit_one(ticket, now)
-            except TimeoutError as e:
-                self._fail(ticket, e)
+            ticket.admitted_at = now
+            ticket.stats.queue_wait_s = now - ticket.submitted_at
+            self._hist_queue_wait.observe(ticket.stats.queue_wait_s)
+            with otrace.span("scheduler.admit", cat="scheduler",
+                             expr=ticket.query.expr) as sp:
+                try:
+                    self._admit_one(ticket, now)
+                except TimeoutError as e:
+                    self._fail(ticket, e)
+                sp.set(state=ticket.state)
             self.peak_in_flight = max(self.peak_in_flight, len(self.active))
 
     def _admit_one(self, ticket: QueryTicket, now: float) -> None:
@@ -374,6 +456,7 @@ class SlotScheduler:
             ticket.stats.results = len(cached)
             ticket.state = "done"
             ticket.finished_at = self.clock()
+            self._settle_stats(ticket)
             self.completed += 1
             return
         ast = rx.parse(q.expr)
@@ -509,24 +592,61 @@ class AsyncServer:
     forwards each ticket's ``new_pairs()`` into its async queue, so
     slot progress and result streaming interleave with the caller's own
     coroutines; it idles (``idle_sleep_s``) while no query is in
-    flight."""
+    flight.
+
+    ``metrics_port`` (``0`` picks a free port, exposed as
+    ``metrics_addr`` once entered) serves the scheduler's Prometheus
+    text exposition over HTTP on every path — scrape it with e.g.
+    ``curl http://127.0.0.1:<port>/metrics``."""
 
     def __init__(self, scheduler: SlotScheduler,
-                 idle_sleep_s: float = 0.001):
+                 idle_sleep_s: float = 0.001,
+                 metrics_port: Optional[int] = None,
+                 metrics_host: str = "127.0.0.1"):
         self.scheduler = scheduler
         self.idle_sleep_s = idle_sleep_s
+        self.metrics_port = metrics_port
+        self.metrics_host = metrics_host
+        self.metrics_addr: Optional[Tuple[str, int]] = None
         self._live: List[AsyncTicket] = []
         self._task: Optional[asyncio.Task] = None
+        self._metrics_srv: Optional[asyncio.AbstractServer] = None
         self._closing = False
 
     async def __aenter__(self) -> "AsyncServer":
         self._task = asyncio.ensure_future(self._pump())
+        if self.metrics_port is not None:
+            self._metrics_srv = await asyncio.start_server(
+                self._serve_metrics, self.metrics_host, self.metrics_port)
+            sock = self._metrics_srv.sockets[0]
+            self.metrics_addr = sock.getsockname()[:2]
         return self
 
     async def __aexit__(self, *exc) -> None:
         self._closing = True
         if self._task is not None:
             await self._task
+        if self._metrics_srv is not None:
+            self._metrics_srv.close()
+            await self._metrics_srv.wait_closed()
+            self._metrics_srv = None
+
+    async def _serve_metrics(self, reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter) -> None:
+        # one-shot HTTP/1.0-style exchange: read the request head, answer
+        # with the text exposition, close — all a scraper needs
+        try:
+            while (await reader.readline()) not in (b"\r\n", b"\n", b""):
+                pass
+            body = self.scheduler.prometheus_text().encode()
+            writer.write(
+                b"HTTP/1.0 200 OK\r\n"
+                b"Content-Type: text/plain; version=0.0.4\r\n"
+                b"Content-Length: " + str(len(body)).encode() + b"\r\n"
+                b"Connection: close\r\n\r\n" + body)
+            await writer.drain()
+        finally:
+            writer.close()
 
     async def submit(self, query: QueryLike,
                      deadline_s: Optional[float] = None) -> AsyncTicket:

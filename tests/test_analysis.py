@@ -240,6 +240,80 @@ def test_r005_router_and_delta_module_exempt(tmp_path):
 
 
 # ---------------------------------------------------------------------
+# R006: raw wall-clock reads inside superstep loops (core/ only)
+# ---------------------------------------------------------------------
+
+def test_r006_flags_raw_timing_in_core_superstep_loop(tmp_path):
+    src = """\
+        import time
+        import time as _time
+
+        def drive(stepper):
+            t_total = 0.0
+            while stepper.pending():
+                t0 = time.perf_counter()       # flagged
+                stepper.step()
+                t_total += time.perf_counter() - t0   # flagged
+                _time.monotonic()              # flagged (aliased module)
+            return t_total
+        """
+    fs = _lint_source(tmp_path, src, rel="src/repro/core/mod.py")
+    assert _rules(fs) == ["R006", "R006", "R006"]
+    assert all("superstep loop" in f.message for f in fs)
+    assert all("obs" in f.hint for f in fs)
+
+
+def test_r006_negatives(tmp_path):
+    # same raw-timing loop OUTSIDE core/ — benchmarks time wall clock
+    # by design, so the rule must not fire there
+    timed_loop = """\
+        import time
+
+        def run_bench(stepper):
+            while stepper.pending():
+                t0 = time.perf_counter()
+                stepper.step()
+        """
+    assert _lint_source(tmp_path, timed_loop,
+                        rel="benchmarks/serving.py") == []
+    # in core/: injectable clock, obs spans, timing outside the loop,
+    # and a non-dispatch while loop are all fine
+    ok_core = """\
+        import time
+        from ..obs import trace as otrace
+
+        def tick(self):
+            while self.pending():
+                now = self.clock()             # injectable clock: ok
+                with otrace.span("scheduler.superstep"):
+                    self.slots.step()
+
+        def summarize(events):
+            t0 = time.perf_counter()           # outside any loop: ok
+            n = 0
+            while events:                      # no dispatch call in body
+                events.pop()
+                time.monotonic()
+                n += 1
+            return n, time.perf_counter() - t0
+        """
+    assert _lint_source(tmp_path, ok_core,
+                        rel="src/repro/core/mod.py") == []
+
+
+def test_r006_noqa_suppresses(tmp_path):
+    src = """\
+        import time
+
+        def drive(stepper):
+            while stepper.pending():
+                t0 = time.monotonic()  # repro: noqa R006 — boot-time probe
+                stepper.step()
+        """
+    assert _lint_source(tmp_path, src, rel="src/repro/core/mod.py") == []
+
+
+# ---------------------------------------------------------------------
 # noqa + baseline mechanics
 # ---------------------------------------------------------------------
 

@@ -268,6 +268,126 @@ def test_async_server_interleaves_updates():
 
 
 # ---------------------------------------------------------------------
+# observability: latency attribution, spans, metrics endpoint
+# ---------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_latency_attribution_sums_under_random_interleavings(seed):
+    """For every settled ticket, queue_wait_s + service_s equals the
+    end-to-end latency (finished_at - submitted_at) under the injectable
+    clock — across random submit/tick interleavings, cache hits,
+    delegated queries, and both engines."""
+    rnd = random.Random(seed)
+    g = random_graph(12, 3, 40, seed=1 + seed % 7, pred_zipf=False)
+    clk = [0.0]
+    for kind in ("ring", "dense"):
+        sched = SlotScheduler(make_engine(g, kind),
+                              max_slots=rnd.randrange(1, 4),
+                              clock=lambda: clk[0])
+        queries = [_random_query(rnd, g.num_nodes)
+                   for _ in range(rnd.randrange(3, 9))]
+        tickets = []
+        i = 0
+        while i < len(queries) or sched.pending():
+            clk[0] += rnd.random() * 0.01    # time passes between events
+            if i < len(queries) and rnd.random() < 0.5:
+                tickets.append(sched.submit(queries[i]))
+                i += 1
+            else:
+                sched.step()
+        for t in tickets:
+            assert t.state == "done"
+            s = t.stats
+            assert s.queue_wait_s >= 0.0 and s.service_s >= 0.0
+            assert s.queue_wait_s + s.service_s == pytest.approx(
+                t.finished_at - t.submitted_at, rel=1e-12, abs=1e-12)
+            # superstep dispatch time is a sub-interval of service
+            assert s.supersteps_s <= s.service_s + 1e-12
+
+
+def test_zero_slack_deadline_preempts_deterministically():
+    """now == deadline preempts (the >= comparison) — both a queued
+    ticket and one holding a slot — and preempted tickets record their
+    queue wait in the metrics."""
+    g = random_graph(12, 3, 40, seed=6, pred_zipf=False)
+    clk = [0.0]
+    sched = SlotScheduler(make_engine(g, "ring"), max_slots=1,
+                          clock=lambda: clk[0])
+    # mid-flight: admitted at 0.0, clock lands exactly on the deadline
+    running = sched.submit(Query("(0|1|2)*", obj=5), deadline_s=1.0)
+    sched.step()
+    assert running.state == "running"
+    # queued: the only slot is held, so this one waits in the queue
+    queued = sched.submit(Query("0/1*", obj=3), deadline_s=1.0)
+    clk[0] = 1.0
+    sched.step()
+    for t in (running, queued):
+        assert t.state == "failed"
+        with pytest.raises(TimeoutError):
+            t.result()
+    assert sched.preempted == 2
+    assert queued.stats.queue_wait_s == pytest.approx(1.0)
+    snap = sched.metrics_snapshot()
+    assert snap["rpq_preempted_queue_wait_seconds"]["count"] == 2
+    assert snap["rpq_preempted_queue_wait_seconds"]["max"] >= 1.0
+
+
+def test_spans_cover_scheduler_and_both_engines():
+    """A traced drain produces admission, superstep, and retire spans —
+    plus the engine's own superstep span — for ring AND dense, and the
+    result is a valid Chrome trace document."""
+    import json
+    from repro.obs import trace as otrace
+    g = random_graph(12, 3, 40, seed=6, pred_zipf=False)
+    for kind, eng_span in (("ring", "ring.superstep"),
+                           ("dense", "dense.superstep")):
+        tr = otrace.Tracer()
+        tr.enable()
+        with otrace.use(tr):
+            sched = SlotScheduler(make_engine(g, kind), max_slots=2)
+            sched.submit(Query("0/1*", obj=3))
+            sched.submit(Query("(0|1)/2", subject=2))
+            sched.drain()
+        names = {e["name"] for e in tr.events}
+        assert {"scheduler.tick", "scheduler.admit", "scheduler.superstep",
+                "scheduler.retire", eng_span} <= names, (kind, names)
+        json.dumps(tr.chrome_trace())         # schema is JSON-able
+    # and with the (default-off) module tracer, the same drain records
+    # nothing and allocates no spans
+    sched = SlotScheduler(make_engine(g, "ring"), max_slots=2)
+    from repro.obs.trace import NULL_SPAN, TRACER
+    assert not TRACER.enabled
+    sched.submit(Query("0/1*", obj=3))
+    sched.drain()
+    assert TRACER.events == []
+
+
+def test_async_server_metrics_endpoint_scrapes():
+    g = random_graph(10, 2, 20, seed=2, pred_zipf=False)
+    eng = make_engine(g, "dense")
+
+    async def main():
+        sched = SlotScheduler(eng, max_slots=2)
+        async with AsyncServer(sched, metrics_port=0) as server:
+            t = await server.submit(Query("0/1*", obj=1))
+            await t.result()
+            host, port = server.metrics_addr
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write(b"GET /metrics HTTP/1.0\r\n\r\n")
+            await writer.drain()
+            data = await reader.read()
+            writer.close()
+            return data.decode()
+
+    text = asyncio.run(main())
+    head, body = text.split("\r\n\r\n", 1)
+    assert "200 OK" in head
+    assert "rpq_completed_total 1" in body
+    assert 'rpq_e2e_seconds{quantile="0.5"}' in body
+
+
+# ---------------------------------------------------------------------
 # benchmarks/compare.py — the perf-regression gate
 # ---------------------------------------------------------------------
 
