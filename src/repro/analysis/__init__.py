@@ -1,31 +1,45 @@
-"""Static invariant analyzer: jaxpr/HLO trace audit + repo lint gate.
+"""Static invariant analyzer: trace audit + lint + semantic dataflow.
 
-Two layers (run both with ``python -m repro.analysis``):
+Three layers (run all with ``python -m repro.analysis``):
 
-* :mod:`repro.analysis.trace_audit` lowers the hot entry points against
-  abstract shapes and audits the jaxprs/HLO (dtype contracts, forbidden
-  host round-trips, pow2 padding, retrace budgets, collective bytes) —
-  rules T001–T006.
-* :mod:`repro.analysis.lint` walks the repo's ASTs for determinism and
-  dispatch-contract violations ordinary linters cannot see — rules
-  R001–R005.
+* :mod:`repro.analysis.trace_audit` (layer 1) lowers the hot entry
+  points against abstract shapes and audits the jaxprs/HLO (dtype
+  contracts, forbidden host round-trips, pow2 padding, retrace budgets,
+  collective bytes) — rules T001–T006, with a content-hash-keyed
+  lowering cache so unchanged entry points skip re-lowering.
+* :mod:`repro.analysis.lint` (layer 2) walks the repo's ASTs for
+  determinism and dispatch-contract violations ordinary linters cannot
+  see — rules R001–R006.
+* :mod:`repro.analysis.semantic` (layer 3) runs intraprocedural
+  dataflow/effect analysis: epoch/COW snapshot consistency over the
+  serving stack (C001–C006, :mod:`repro.analysis.consistency`) and
+  symbolic bounds/overflow proofs over the bit-parallel packing
+  arithmetic (B001–B004, :mod:`repro.analysis.bounds`).
 
-Findings are gated against the checked-in ``baseline.json`` allowlist;
-see :mod:`repro.analysis.findings`.
+Findings are gated against the checked-in ``baseline.json`` allowlist
+and exportable as SARIF; see :mod:`repro.analysis.findings`.
 
 This module deliberately does NOT import the jax-heavy trace-audit layer
 at package-import time, so ``from repro.analysis import lint`` stays
-cheap inside editors and pre-commit hooks.
+cheap inside editors and pre-commit hooks — and the lint/semantic
+layers run identically under minimal installs.
 """
-from .findings import Finding, filter_new, load_baseline, write_baseline
+from .findings import (Finding, filter_new, load_baseline, to_sarif,
+                       update_baseline, write_baseline)
 from .lint import DEFAULT_LINT_DIRS, lint_file, run_lint
+from .semantic import SEMANTIC_DIRS, analyze_file, run_semantic
 
 __all__ = [
     "DEFAULT_LINT_DIRS",
     "Finding",
+    "SEMANTIC_DIRS",
+    "analyze_file",
     "filter_new",
     "lint_file",
     "load_baseline",
     "run_lint",
+    "run_semantic",
+    "to_sarif",
+    "update_baseline",
     "write_baseline",
 ]

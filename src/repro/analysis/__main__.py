@@ -1,29 +1,34 @@
 """CLI for the static invariant analyzer.
 
-    python -m repro.analysis             # --all (lint + trace audit)
-    python -m repro.analysis --lint      # AST rules only (no jax import)
-    python -m repro.analysis --trace     # jaxpr/HLO audit only
-    python -m repro.analysis --json out.json
-    python -m repro.analysis --write-baseline
-    python -m repro.analysis --force-host-devices 8 --trace
+    python -m repro.analysis                  # all layers
+    python -m repro.analysis --layer lint     # AST rules only (no jax)
+    python -m repro.analysis --layer semantic # dataflow C/B rules only
+    python -m repro.analysis --layer trace    # jaxpr/HLO audit only
+    python -m repro.analysis --json out.json --sarif out.sarif
+    python -m repro.analysis --update-baseline
+    python -m repro.analysis --force-host-devices 8 --layer trace
 
+``--lint``/``--trace``/``--all`` are kept as aliases of ``--layer``.
 Exit status 0 iff no finding survives the baseline filter — this is the
 CI gate.  ``--force-host-devices N`` must set XLA_FLAGS before jax is
 imported, which is why the trace-audit import happens inside ``main``.
+The lint and semantic layers are pure-AST: they behave identically
+under the full and minimal dependency sets.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 from pathlib import Path
 
 from .findings import (Finding, filter_new, load_baseline, render_report,
-                       to_json, write_baseline)
+                       to_json, to_sarif, update_baseline, write_baseline)
 from .lint import run_lint
+from .semantic import run_semantic
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+LAYERS = ("lint", "semantic", "trace")
 
 
 def _find_root(start: Path) -> Path:
@@ -39,13 +44,18 @@ def _find_root(start: Path) -> Path:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="jaxpr/HLO trace audit + repo-specific lint gate")
+        description="jaxpr/HLO trace audit + repo lint + semantic "
+                    "dataflow gate")
+    ap.add_argument("--layer", action="append", choices=(*LAYERS, "all"),
+                    metavar="{lint,semantic,trace,all}",
+                    help="layer(s) to run (repeatable; default: all)")
     ap.add_argument("--lint", action="store_true",
-                    help="run only the AST lint rules (R001-R005)")
+                    help="alias for --layer lint (R001-R006)")
     ap.add_argument("--trace", action="store_true",
-                    help="run only the jaxpr/HLO trace audit (T001-T006)")
+                    help="alias for --layer trace (T001-T006)")
     ap.add_argument("--all", action="store_true",
-                    help="run both layers (default when neither is given)")
+                    help="alias for --layer all (default when no layer "
+                         "is given)")
     ap.add_argument("--root", type=Path, default=None,
                     help="repo root (default: auto-detect from cwd)")
     ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
@@ -54,15 +64,32 @@ def main(argv=None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from the current finding "
                          "set and exit 0")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings, "
+                         "keeping justifications of entries that still "
+                         "fire and PRUNING stale fingerprints; prints the "
+                         "pruned count and exits 0")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
                     help="also write the full finding list as JSON")
+    ap.add_argument("--sarif", type=Path, default=None, metavar="PATH",
+                    help="also write post-baseline findings as SARIF 2.1.0 "
+                         "(GitHub code-scanning annotations)")
+    ap.add_argument("--no-trace-cache", action="store_true",
+                    help="bypass the trace-audit lowering cache (always "
+                         "re-lower)")
     ap.add_argument("--force-host-devices", type=int, default=0, metavar="N",
                     help="force N XLA host devices (multi-device trace "
                          "audit on CPU); must be set before jax imports, "
                          "so pass it rather than exporting XLA_FLAGS")
     args = ap.parse_args(argv)
 
-    run_both = args.all or not (args.lint or args.trace)
+    layers = set(args.layer or ())
+    if args.lint:
+        layers.add("lint")
+    if args.trace:
+        layers.add("trace")
+    if args.all or "all" in layers or not layers:
+        layers = set(LAYERS)
     root = args.root or _find_root(Path.cwd())
 
     if args.force_host_devices:
@@ -74,11 +101,16 @@ def main(argv=None) -> int:
 
     findings: list[Finding] = []
     notes: list[str] = []
-    if run_both or args.lint:
+    if "lint" in layers:
         findings += run_lint(root)
-    if run_both or args.trace:
+    if "semantic" in layers:
+        s_findings, s_notes = run_semantic(root)
+        findings += s_findings
+        notes += s_notes
+    if "trace" in layers:
         from .trace_audit import run_trace_audit  # jax import lives here
-        t_findings, t_notes = run_trace_audit(root)
+        t_findings, t_notes = run_trace_audit(
+            root, use_cache=not args.no_trace_cache)
         findings += t_findings
         notes += t_notes
 
@@ -86,6 +118,11 @@ def main(argv=None) -> int:
         write_baseline(args.baseline, findings)
         print(f"baseline written: {args.baseline} "
               f"({len(findings)} finding(s) allowlisted)")
+        return 0
+    if args.update_baseline:
+        kept, added, pruned = update_baseline(args.baseline, findings)
+        print(f"baseline updated: {args.baseline} ({kept} kept, "
+              f"{added} added, {pruned} stale fingerprint(s) pruned)")
         return 0
 
     baseline = load_baseline(args.baseline)
@@ -97,6 +134,9 @@ def main(argv=None) -> int:
             "baselined": len(findings) - len(new),
             "notes": notes,
         }, indent=1) + "\n")
+    if args.sarif:
+        args.sarif.parent.mkdir(parents=True, exist_ok=True)
+        args.sarif.write_text(json.dumps(to_sarif(new), indent=1) + "\n")
     print(render_report(new, baselined=len(findings) - len(new),
                         notes=notes))
     return 1 if new else 0

@@ -1,8 +1,10 @@
-"""Finding model, report rendering, and the baseline allowlist.
+"""Finding model, report rendering, SARIF export, and the baseline
+allowlist.
 
 A :class:`Finding` is one analyzer hit: ``file:line``, a rule id
 (``R00x`` for the AST lint layer, ``T00x`` for the lowering-time trace
-audit), a message, and a fix hint.  Findings are *fingerprinted* by
+audit, ``C00x``/``B00x`` for the semantic consistency/bounds layer), a
+message, and a fix hint.  Findings are *fingerprinted* by
 ``(file, rule, hash of the stripped source snippet)`` — deliberately not
 by line number, so unrelated edits that shift a pre-existing finding
 down the file do not make it look new.
@@ -18,7 +20,7 @@ import hashlib
 import json
 from dataclasses import asdict, dataclass
 from pathlib import Path
-from typing import Dict, Iterable, List, Sequence, Set
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
 
 
 @dataclass(frozen=True)
@@ -28,7 +30,7 @@ class Finding:
 
     file: str           # repo-relative posix path
     line: int           # 1-based; 0 = whole-file / non-source finding
-    rule: str           # "R001".."R005" lint, "T001".."T006" trace audit
+    rule: str           # R00x lint, T00x trace, C00x/B00x semantic
     message: str
     hint: str = ""
     snippet: str = ""
@@ -79,6 +81,49 @@ def write_baseline(path: Path, findings: Sequence[Finding],
     Path(path).write_text(json.dumps(doc, indent=1) + "\n")
 
 
+def update_baseline(path: Path, findings: Sequence[Finding],
+                    justification: str = "grandfathered pre-existing "
+                                         "finding"
+                    ) -> Tuple[int, int, int]:
+    """Rewrite the baseline from the current finding set, *preserving*
+    the justification of every entry that still fires and *pruning*
+    fingerprints no findings match anymore (stale entries otherwise
+    accumulate silently as the code they allowlisted gets fixed).
+
+    Returns ``(kept, added, pruned)`` entry counts.
+    """
+    path = Path(path)
+    existing: Dict[str, str] = {}
+    if path.exists():
+        doc = json.loads(path.read_text())
+        existing = {e["fingerprint"]: e.get("justification", justification)
+                    for e in doc.get("findings", [])}
+    current: Dict[str, Finding] = {}
+    for f in sorted(findings, key=lambda f: (f.file, f.rule, f.line)):
+        current.setdefault(f.fingerprint, f)
+    kept = sum(1 for fp in current if fp in existing)
+    added = len(current) - kept
+    pruned = sum(1 for fp in existing if fp not in current)
+    doc = {
+        "comment": "Allowlisted pre-existing findings; the gate fails "
+                   "only on fingerprints not in this file.  Refresh "
+                   "with `python -m repro.analysis --update-baseline` "
+                   "(prunes stale entries, keeps justifications).",
+        "findings": [
+            {
+                "fingerprint": fp,
+                "file": f.file,
+                "rule": f.rule,
+                "message": f.message,
+                "justification": existing.get(fp, justification),
+            }
+            for fp, f in current.items()
+        ],
+    }
+    path.write_text(json.dumps(doc, indent=1) + "\n")
+    return kept, added, pruned
+
+
 def filter_new(findings: Iterable[Finding],
                baseline: Set[str]) -> List[Finding]:
     """Findings not covered by the baseline — what the gate fails on."""
@@ -87,6 +132,50 @@ def filter_new(findings: Iterable[Finding],
 
 def to_json(findings: Sequence[Finding]) -> List[Dict]:
     return [dict(asdict(f), fingerprint=f.fingerprint) for f in findings]
+
+
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/"
+                "sarif-spec/master/Schemata/sarif-schema-2.1.0.json")
+
+
+def to_sarif(findings: Sequence[Finding],
+             tool_version: str = "0") -> Dict:
+    """SARIF 2.1.0 log of ``findings`` — one run, one result per
+    finding, fingerprinted with the analyzer's own stable fingerprint
+    so GitHub code scanning tracks findings across line drift the same
+    way the baseline does."""
+    ordered = sorted(findings, key=lambda f: (f.file, f.line, f.rule))
+    rules = sorted({f.rule for f in ordered})
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {
+                "driver": {
+                    "name": "repro-analysis",
+                    "version": tool_version,
+                    "rules": [{"id": r,
+                               "shortDescription": {"text": r}}
+                              for r in rules],
+                },
+            },
+            "results": [{
+                "ruleId": f.rule,
+                "level": "error",
+                "message": {"text": f.message + (
+                    f"\nhint: {f.hint}" if f.hint else "")},
+                "locations": [{
+                    "physicalLocation": {
+                        "artifactLocation": {"uri": f.file},
+                        "region": {"startLine": max(f.line, 1)},
+                    },
+                }],
+                "partialFingerprints": {
+                    "reproAnalysis/v1": f.fingerprint,
+                },
+            } for f in ordered],
+        }],
+    }
 
 
 def render_report(findings: Sequence[Finding],

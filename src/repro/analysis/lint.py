@@ -42,10 +42,10 @@ grandfathered via the checked-in baseline (see ``findings.py``).
 from __future__ import annotations
 
 import ast
-import re
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
+from . import dataflow as _df
 from .findings import Finding
 
 # Directories the gate lints by default (repo-relative).  tests/ are
@@ -60,7 +60,9 @@ DEFAULT_LINT_DIRS = (
     "benchmarks",
 )
 
-_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\s+(R\d{3}(?:\s*,\s*R\d{3})*)")
+# Shared with the semantic layer (dataflow.NOQA_RE): one suppression
+# syntax accepting R (lint), C/B (semantic), and T (trace) rule ids.
+_NOQA_RE = _df.NOQA_RE
 
 # R001 -----------------------------------------------------------------
 # Calls whose argument order does not matter — a ListComp/GeneratorExp
@@ -89,39 +91,12 @@ _OVERLAY_RECEIVER_NAMES = {"ov", "overlay", "delta"}
 _OPTIONAL_MODULES = {"hypothesis", "zstandard", "jax.experimental.shard_map"}
 
 
-def _call_name(func: ast.expr) -> str:
-    """Trailing identifier of a call target: ``f`` for f(...), ``m`` for
-    obj.m(...); empty string for anything fancier."""
-    if isinstance(func, ast.Name):
-        return func.id
-    if isinstance(func, ast.Attribute):
-        return func.attr
-    return ""
-
-
-def _attach_parents(tree: ast.AST) -> None:
-    for node in ast.walk(tree):
-        for child in ast.iter_child_nodes(node):
-            child._repro_parent = node  # type: ignore[attr-defined]
-
-
-def _parent(node: ast.AST) -> Optional[ast.AST]:
-    return getattr(node, "_repro_parent", None)
-
-
-def _noqa_rules(source_lines: Sequence[str], lineno: int) -> Set[str]:
-    if not (1 <= lineno <= len(source_lines)):
-        return set()
-    m = _NOQA_RE.search(source_lines[lineno - 1])
-    if not m:
-        return set()
-    return {r.strip() for r in m.group(1).split(",")}
-
-
-def _snippet(source_lines: Sequence[str], lineno: int) -> str:
-    if 1 <= lineno <= len(source_lines):
-        return source_lines[lineno - 1].strip()
-    return ""
+# AST topology + suppression helpers shared with the semantic layer.
+_call_name = _df.call_name
+_attach_parents = _df.attach_parents
+_parent = _df.parent
+_noqa_rules = _df.noqa_rules
+_snippet = _df.snippet
 
 
 # ---------------------------------------------------------------------
@@ -248,22 +223,8 @@ def _collect_local_sets(fn: ast.AST) -> Set[str]:
     return names
 
 
-def _enclosing_class(node: ast.AST) -> Optional[ast.ClassDef]:
-    cur = _parent(node)
-    while cur is not None:
-        if isinstance(cur, ast.ClassDef):
-            return cur
-        cur = _parent(cur)
-    return None
-
-
-def _enclosing_function(node: ast.AST) -> Optional[ast.AST]:
-    cur = _parent(node)
-    while cur is not None:
-        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            return cur
-        cur = _parent(cur)
-    return None
+_enclosing_class = _df.enclosing_class
+_enclosing_function = _df.enclosing_function
 
 
 def _for_body_is_order_sensitive(for_node: ast.For) -> bool:

@@ -26,11 +26,22 @@ T006  lowering failure: an entry point that no longer lowers at all.
 
 ``audit_jaxpr`` is the reusable primitive — tests hand it deliberately
 bad step functions to prove the walker catches them.
+
+Each named check's result is cached on disk under
+``<root>/.cache/repro-analysis/``, keyed by the content hash of the
+source files the check lowers plus the jax version and device
+signature — unchanged entry points skip re-lowering entirely, and the
+driver reports hit/miss counts in its notes (they land in the CI
+findings artifact).  ``--no-trace-cache`` (or ``use_cache=False``)
+forces a live run.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+from dataclasses import asdict
 from pathlib import Path
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -373,22 +384,129 @@ def check_collective_bytes(notes: List[str]) -> List[Finding]:
 
 
 # ---------------------------------------------------------------------
-# driver
+# driver + lowering cache
 # ---------------------------------------------------------------------
 
-def run_trace_audit(root: Path = Path(".")) -> Tuple[List[Finding], List[str]]:
-    """All trace-audit checks.  Returns (findings, human-readable notes).
-    ``root`` is unused (the audit runs against the imported package) but
-    kept for CLI symmetry with ``run_lint``."""
-    del root
-    notes: List[str] = []
+def _check_collective(notes: List[str]) -> List[Finding]:
+    return check_collective_bytes(notes)
+
+
+def _no_notes(fn: Callable[[], List[Finding]]
+              ) -> Callable[[List[str]], List[Finding]]:
+    return lambda notes: fn()
+
+
+# (name, check(notes) -> findings, repo-relative source deps).  The dep
+# sets are what each check lowers: editing any listed file (or any file
+# under a listed directory) invalidates that check's cache entry only.
+CHECKS: Tuple[Tuple[str, Callable[[List[str]], List[Finding]],
+                    Tuple[str, ...]], ...] = (
+    ("kernel_contracts", _no_notes(check_kernel_contracts),
+     ("src/repro/kernels",)),
+    ("hetero_bfs", _no_notes(check_hetero_bfs),
+     ("src/repro/kernels", "src/repro/core/dense.py")),
+    ("sharded_steps", _no_notes(check_sharded_steps),
+     ("src/repro/kernels", "src/repro/core/distributed.py",
+      "src/repro/launch")),
+    ("pow2_padding", _no_notes(check_pow2_padding),
+     ("src/repro/core/dense.py",)),
+    ("retraces", _no_notes(check_retraces),
+     ("src/repro/core", "src/repro/kernels")),
+    ("collective_bytes", _check_collective,
+     ("src/repro/kernels", "src/repro/core/distributed.py",
+      "src/repro/launch")),
+)
+
+DEFAULT_CACHE_DIR = Path(".cache/repro-analysis")
+
+
+def cache_key(root: Path, name: str, deps: Sequence[str]) -> Optional[str]:
+    """Content hash over a check's source dependencies plus the jax /
+    device signature.  ``None`` when no dep file resolves (running
+    outside a source checkout) — such a check is uncacheable."""
+    h = hashlib.sha256()
+    h.update(f"{name}:{jax.__version__}:{jax.default_backend()}:"
+             f"{len(jax.devices())}".encode())
+    seen = 0
+    for dep in deps:
+        base = Path(root) / dep
+        files = sorted(base.rglob("*.py")) if base.is_dir() else \
+            [base] if base.is_file() else []
+        for path in files:
+            h.update(path.name.encode())
+            h.update(path.read_bytes())
+            seen += 1
+    return h.hexdigest() if seen else None
+
+
+def _run_checks_cached(
+    root: Path,
+    checks: Sequence[Tuple[str, Callable[[List[str]], List[Finding]],
+                           Sequence[str]]],
+    cache_dir: Optional[Path],
+    use_cache: bool,
+) -> Tuple[List[Finding], List[str], int, int]:
+    """Run ``checks`` through the lowering cache.  Returns
+    (findings, notes, hits, misses)."""
+    cache_path = None
+    cache: Dict[str, Dict] = {}
+    if use_cache:
+        cache_path = Path(cache_dir or Path(root) / DEFAULT_CACHE_DIR)
+        cache_path = cache_path / "trace_audit.json"
+        if cache_path.exists():
+            try:
+                cache = json.loads(cache_path.read_text())
+            except (ValueError, OSError):
+                cache = {}
     findings: List[Finding] = []
-    findings += check_kernel_contracts()
-    findings += check_hetero_bfs()
-    findings += check_sharded_steps()
-    findings += check_pow2_padding()
-    findings += check_retraces()
-    findings += check_collective_bytes(notes)
+    notes: List[str] = []
+    hits = misses = 0
+    dirty = False
+    for name, fn, deps in checks:
+        key = cache_key(root, name, deps) if use_cache else None
+        entry = cache.get(key) if key else None
+        if entry is not None and entry.get("check") == name:
+            findings += [Finding(**f) for f in entry["findings"]]
+            notes += list(entry["notes"])
+            hits += 1
+            continue
+        local_notes: List[str] = []
+        got = fn(local_notes)
+        findings += got
+        notes += local_notes
+        misses += 1
+        if key:
+            cache[key] = {"check": name,
+                          "findings": [asdict(f) for f in got],
+                          "notes": local_notes}
+            dirty = True
+    if dirty and cache_path is not None:
+        # keep entries for other device/version signatures, but drop
+        # superseded keys of the checks just re-run so the file does
+        # not grow without bound as sources churn
+        fresh_names = {name for name, _, _ in checks}
+        live_keys = {cache_key(root, name, deps)
+                     for name, _, deps in checks}
+        cache = {k: v for k, v in cache.items()
+                 if k in live_keys or v.get("check") not in fresh_names}
+        cache_path.parent.mkdir(parents=True, exist_ok=True)
+        cache_path.write_text(json.dumps(cache, indent=1) + "\n")
+    return findings, notes, hits, misses
+
+
+def run_trace_audit(root: Path = Path("."), *,
+                    cache_dir: Optional[Path] = None,
+                    use_cache: bool = True
+                    ) -> Tuple[List[Finding], List[str]]:
+    """All trace-audit checks.  Returns (findings, human-readable
+    notes).  The audit runs against the *imported* package; ``root`` is
+    only used to locate the source files that key (and the directory
+    that stores) the lowering cache."""
+    findings, notes, hits, misses = _run_checks_cached(
+        root, CHECKS, cache_dir, use_cache)
+    notes.append(f"trace-audit lowering cache: {hits} hit(s), "
+                 f"{misses} miss(es)"
+                 if use_cache else "trace-audit lowering cache: disabled")
     notes.append(f"trace audit ran on {len(jax.devices())} "
                  f"{jax.default_backend()} device(s)")
     return findings, notes

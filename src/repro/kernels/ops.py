@@ -73,7 +73,7 @@ def rank1(words, directory, i):
     partial = jnp.where(
         inword == 0,
         jnp.uint32(0),
-        (jnp.uint32(0xFFFFFFFF)) >> (jnp.uint32(32) - inword),
+        (jnp.uint32(0xFFFFFFFF)) >> (jnp.uint32(32) - inword),  # repro: noqa B002 — amount hits 32 only in lanes where the enclosing where() selects the inword==0 branch; the out-of-range lane is discarded
     )
     masks = jnp.where(
         rel > 0,

@@ -44,7 +44,7 @@ def rank1_ref(words: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
     partial_mask = jnp.where(
         inword == 0,
         jnp.uint32(0),
-        jnp.uint32(0xFFFFFFFF) >> (jnp.uint32(32) - inword),
+        jnp.uint32(0xFFFFFFFF) >> (jnp.uint32(32) - inword),  # repro: noqa B002 — amount hits 32 only in lanes where the enclosing where() selects the inword==0 branch; the out-of-range lane is discarded
     )
     partial = jax.lax.population_count(
         words[jnp.clip(wq, 0, words.shape[0] - 1)] & partial_mask

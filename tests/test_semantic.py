@@ -1,0 +1,689 @@
+"""Layer-3 semantic analyzer tests: one positive (seeded violation) and
+one negative (canonical idiom) fixture per C/B rule — so deleting a
+rule's checker fails exactly that rule's test — plus the determinism
+contract (two runs, byte-identical findings JSON), the repo-is-clean
+gate, SARIF export, baseline pruning, and the trace-audit lowering
+cache."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Finding, analyze_file, filter_new,
+                            load_baseline, run_semantic, to_sarif,
+                            update_baseline, write_baseline)
+from repro.analysis import semantic
+from repro.analysis.bounds import INT64_MAX
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BASELINE = REPO_ROOT / "src/repro/analysis/baseline.json"
+
+
+def _analyze(tmp_path, source, rel="src/repro/core/mod.py"):
+    path = tmp_path / "mod.py"
+    path.write_text(textwrap.dedent(source))
+    return analyze_file(path, rel)
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------
+# C001: step-scope reads must flow from pinned snapshots
+# ---------------------------------------------------------------------
+
+def test_c001_flags_live_engine_reads_in_step_scope(tmp_path):
+    src = """\
+        class Stepper:
+            def __init__(self, eng):
+                self.eng = eng
+
+            def step(self):
+                eng = self.eng
+                ov = eng.delta            # live overlay, not the pin
+                edges = self.eng._edges() # live edge resolve
+                return ov, edges
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C001", "C001"]
+    assert {f.line for f in fs} == {7, 8}
+
+
+def test_c001_allows_pinned_snapshots_and_free_functions(tmp_path):
+    src = """\
+        def step(eng):
+            return eng.delta  # free function: jit closure, not step scope
+
+        class Stepper:
+            def add_job(self, job):
+                job.ring = self.eng.ring  # admission-time pin: allowed
+
+            def step(self, job):
+                bwd = job.ring            # reads flow from the pin
+                snap = job.ov
+                return bwd, snap
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+# ---------------------------------------------------------------------
+# C002: COW routing — clone() -> apply_engine_updates
+# ---------------------------------------------------------------------
+
+def test_c002_flags_unrouted_overlay_mutations(tmp_path):
+    src = """\
+        def submit_update(eng, add, remove):
+            apply_engine_updates(eng, add, remove)  # no COW swap first
+
+        def sneaky(eng, add):
+            ov = eng.delta
+            ov.apply(add, [])                        # aliased mutation
+
+        class Eng:
+            def rebind(self, other):
+                self.delta = other.delta             # non-clone rebind
+        """
+    assert _rules(_analyze(tmp_path, src)) == ["C002", "C002", "C002"]
+
+
+def test_c002_allows_clone_swap_discipline(tmp_path):
+    src = """\
+        def apply_engine_updates(engine, add, remove):
+            pass
+
+        def submit_update(eng, add, remove):
+            eng.delta = eng.delta.clone()
+            apply_engine_updates(eng, add, remove)
+
+        class Eng:
+            def __init__(self):
+                self.delta = None
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+def test_c002_exempts_the_delta_module_itself(tmp_path):
+    src = """\
+        class Eng:
+            def rebind(self, other):
+                self.delta = other.delta
+        """
+    assert _analyze(tmp_path, src, rel="src/repro/core/delta.py") == []
+
+
+# ---------------------------------------------------------------------
+# C003: slot acquire/release pairing
+# ---------------------------------------------------------------------
+
+def test_c003_flags_unpaired_module_add_slot(tmp_path):
+    src = """\
+        class Stepper:
+            def add_job(self, job, plan):
+                job.offset = self.bundle.add_slot(plan, 8)
+                self.jobs.append(job)
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C003"]
+    assert "free_slot" in fs[0].message
+
+
+def test_c003_flags_early_exit_before_publish(tmp_path):
+    src = """\
+        class Sched:
+            def admit_one(self, plan, start):
+                handle = self.slots.admit(plan, start)
+                if self.closed:
+                    return None
+                self.active.append(handle)
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C003"]
+    assert "early exit" in fs[0].message
+
+
+def test_c003_flags_never_settled_handle(tmp_path):
+    src = """\
+        class Sched:
+            def grab(self, plan):
+                handle = self.slots.admit(plan)
+                self.stats.grabs += 1
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C003"]
+    assert "never" in fs[0].message
+
+
+def test_c003_flags_remove_without_release(tmp_path):
+    src = """\
+        class Sched:
+            def expire(self, now):
+                for a in list(self.active):
+                    if a.deadline < now:
+                        self.active.remove(a)
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C003"]
+    assert "remove" in fs[0].message
+
+
+def test_c003_allows_paired_and_transferred_ownership(tmp_path):
+    src = """\
+        class Stepper:
+            def add_job(self, job, plan):
+                job.offset = self.bundle.add_slot(plan, 8)
+                self.jobs.append(job)
+
+            def remove_job(self, job):
+                job.done = True
+                self.bundle.free_slot(job.offset)
+                if job in self.jobs:
+                    self.jobs.remove(job)
+
+        class Sched:
+            def admit_one(self, ticket, plan, start):
+                handle = self.slots.admit(plan, start)
+                active = _Active(ticket=ticket, handle=handle)
+                self.active.append(active)
+
+            def harvest_done(self):
+                for a in list(self.active):
+                    self.slots.release(a.handle)
+                    self.active.remove(a)
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+# ---------------------------------------------------------------------
+# C004: epoch pinned once, at admission, beside its snapshot
+# ---------------------------------------------------------------------
+
+def test_c004_flags_stray_pins_and_mutation_in_window(tmp_path):
+    src = """\
+        def harvest(tickets, eng):
+            for ticket in tickets:
+                ticket.epoch = eng.epoch      # pin outside admission
+
+        class Sched:
+            def _admit_one(self, ticket, eng, add, remove):
+                ticket.epoch = eng.epoch
+                eng.submit_update(add, remove)  # mutates inside window
+                snap = self.slots.snapshot()
+                self.slots.admit(snap)
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C004", "C004"]
+    assert any("outside an admission path" in f.message for f in fs)
+    assert any("submit_update" in f.message for f in fs)
+
+
+def test_c004_allows_admission_pin_and_telemetry(tmp_path):
+    src = """\
+        class Sched:
+            def _admit_one(self, ticket, eng, plan, start):
+                ticket.epoch = eng.epoch
+                handle = self.slots.admit(plan, start, self.slots.snapshot())
+                active = _Active(ticket=ticket, handle=handle)
+                self.active.append(active)
+
+            def telemetry(self, stats, eng):
+                stats.epoch = eng.epoch  # recording, not a ticket pin
+
+            def finish(self, ticket, out):
+                return (out, ticket.epoch)  # reads are always fine
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+# ---------------------------------------------------------------------
+# C005: streamed-result state only grows
+# ---------------------------------------------------------------------
+
+def test_c005_flags_shrinking_streamed_state(tmp_path):
+    src = """\
+        class Stepper:
+            def reset(self, job):
+                job.reported = set()      # rebind outside __init__
+
+            def compact(self, job):
+                job.reported.clear()      # shrink
+        """
+    assert _rules(_analyze(tmp_path, src)) == ["C005", "C005"]
+
+
+def test_c005_allows_monotone_growth(tmp_path):
+    src = """\
+        class _Job:
+            def __init__(self):
+                self.reported = set()
+
+        class Stepper:
+            def harvest_new(self, a, rows):
+                new = rows - a.seen
+                a.seen |= new
+                a.reported.update(new)
+                return new
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+# ---------------------------------------------------------------------
+# C006: no await between capture and admission
+# ---------------------------------------------------------------------
+
+def test_c006_flags_await_in_capture_window(tmp_path):
+    src = """\
+        class Server:
+            async def submit(self, q):
+                epoch = self.engine.epoch
+                await self.flush()
+                self.scheduler.admit(q, epoch)
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C006"]
+    assert fs[0].line == 4
+
+
+def test_c006_allows_awaits_outside_the_window(tmp_path):
+    src = """\
+        class Server:
+            async def submit(self, q):
+                await self.flush()
+                snap = self.engine.snapshot()
+                self.scheduler.admit(q, snap)
+                await self.pump()
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+# ---------------------------------------------------------------------
+# B001: packed-key overflow proofs + binding constraint
+# ---------------------------------------------------------------------
+
+def test_b001_flags_overflowing_packed_key(tmp_path):
+    src = """\
+        def pack_bad(s, p, o, num_nodes):
+            return (o * num_nodes + p) * num_nodes * num_nodes + s
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["B001"]
+    assert "int64" in fs[0].message
+
+
+def test_b001_proves_canonical_key_and_emits_binding(tmp_path):
+    src = """\
+        def pack_keys(s, p, o, num_nodes, num_preds_completed):
+            return (o * num_preds_completed + p) * num_nodes + s
+        """
+    path = tmp_path / "mod.py"
+    path.write_text(textwrap.dedent(src))
+    findings, sites = semantic._analyze_file(path, "src/repro/core/mod.py")
+    assert findings == []
+    assert len(sites) == 1
+    assert 0 < sites[0]["hi"] <= INT64_MAX
+    assert "int64 binds at |V| ~ 2^" in sites[0]["binding"]
+
+
+# ---------------------------------------------------------------------
+# B002: data-derived shift amounts on uint32 words
+# ---------------------------------------------------------------------
+
+KERNEL_REL = "src/repro/kernels/mod.py"
+
+
+def test_b002_flags_unbounded_and_overwide_shifts(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def mask_unproven(x, inword):
+            return x >> (jnp.uint32(32) - jnp.uint32(inword))
+
+        def mask_reaches_32(x, i):
+            inword = i & 31
+            return x >> (jnp.uint32(32) - jnp.uint32(inword))
+        """
+    fs = _analyze(tmp_path, src, rel=KERNEL_REL)
+    assert _rules(fs) == ["B002", "B002"]
+    assert any("cannot statically bound" in f.message for f in fs)
+    assert any("reach 32" in f.message for f in fs)
+
+
+def test_b002_allows_proven_inword_shifts(tmp_path):
+    src = """\
+        import numpy as np
+        import jax.numpy as jnp
+
+        def unpack(x, j, packed):
+            w, b = divmod(j, 32)
+            lo = x >> jnp.uint32(b)
+            hi = x >> jnp.uint32(5)
+            bits = (packed >> np.arange(32, dtype=np.uint32)) & 1
+            return lo, hi, bits
+        """
+    assert _analyze(tmp_path, src, rel=KERNEL_REL) == []
+
+
+def test_b002_scope_is_kernels_only(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def helper(x, k):
+            return x >> jnp.uint32(k)
+        """
+    assert _analyze(tmp_path, src, rel="src/repro/core/mod.py") == []
+
+
+# ---------------------------------------------------------------------
+# B003: pow2 padding + best-fit reuse discipline
+# ---------------------------------------------------------------------
+
+def test_b003_flags_broken_pad_and_bestfit_idioms(tmp_path):
+    src = """\
+        class Bundle:
+            def slot_bucket(self, size):
+                w = 3                      # non-pow2 base
+                while w < size:
+                    w *= 2
+                return w
+
+            def padded(self, total):
+                w = 32
+                while w <= total:          # '<=' doubles past minimal
+                    w *= 2
+                return w
+
+            def padded_capped(self, total, cap):
+                w = 32
+                while w < total and w < cap:  # can exit below live width
+                    w *= 2
+                return w
+
+            def pick(self, size):
+                best = None
+                for fi, bi in enumerate(self._free):
+                    if self.sizes[bi] >= size:  # raw size, not bucketed
+                        best = (fi, bi)
+                return best
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["B003", "B003", "B003", "B003"]
+    assert any("power of two" in f.message for f in fs)
+    assert any("'<='" in f.message for f in fs)
+    assert any("extra conjuncts" in f.message for f in fs)
+    assert any("bucket" in f.message for f in fs)
+
+
+def test_b003_allows_canonical_pad_and_bucketed_bestfit(tmp_path):
+    src = """\
+        class Bundle:
+            def slot_bucket(self, size):
+                w = 4
+                while w < size:
+                    w *= 2
+                return w
+
+            def pick(self, size):
+                bucket = self.slot_bucket(size)
+                best = None
+                for fi, bi in enumerate(self._free):
+                    if self.sizes[bi] >= bucket and (
+                            best is None
+                            or self.sizes[bi] < self.sizes[best[1]]):
+                        best = (fi, bi)
+                return best
+        """
+    assert _analyze(tmp_path, src) == []
+
+
+# ---------------------------------------------------------------------
+# B004: kernel loop structure vs the 32-bit word
+# ---------------------------------------------------------------------
+
+def test_b004_flags_overwide_word_splits_and_loops(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def bad_split(x, j):
+            w, b = divmod(j, 64)
+            return x >> jnp.uint32(b)
+
+        def bad_loop(x):
+            acc = x
+            for b in range(64):
+                acc = acc | (x << jnp.uint32(b))
+            return acc
+        """
+    fs = _analyze(tmp_path, src, rel=KERNEL_REL)
+    assert _rules(fs) == ["B004", "B004", "B004"]
+    assert any("divmod" in f.message for f in fs)
+    assert any("loop-structured" in f.message for f in fs)
+
+
+def test_b004_allows_word_sized_splits(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def split(x, j):
+            w, b = divmod(j, 32)
+            out = x
+            for k in range(32):
+                out = out | (x << jnp.uint32(k))
+            return out >> jnp.uint32(b)
+        """
+    assert _analyze(tmp_path, src, rel=KERNEL_REL) == []
+
+
+# ---------------------------------------------------------------------
+# noqa mechanics on the semantic layer
+# ---------------------------------------------------------------------
+
+def test_semantic_noqa_suppresses_only_named_rule(tmp_path):
+    src = """\
+        class Stepper:
+            def step(self):
+                eng = self.eng
+                a = eng.delta  # repro: noqa C001 — fixture suppression
+                b = eng.delta  # repro: noqa C002 — wrong rule id
+                return a, b
+        """
+    fs = _analyze(tmp_path, src)
+    assert _rules(fs) == ["C001"]
+    assert fs[0].line == 5
+
+
+# ---------------------------------------------------------------------
+# determinism + the repo-is-clean gate
+# ---------------------------------------------------------------------
+
+def test_semantic_runs_are_byte_identical():
+    """Two full runs over the real tree serialize to identical bytes —
+    the CI artifact must not churn without a source change."""
+    from repro.analysis.findings import to_json
+    f1, n1 = run_semantic(REPO_ROOT)
+    f2, n2 = run_semantic(REPO_ROOT)
+    blob1 = json.dumps({"new": to_json(f1), "notes": n1}).encode()
+    blob2 = json.dumps({"new": to_json(f2), "notes": n2}).encode()
+    assert blob1 == blob2
+
+
+def test_repo_is_semantically_clean():
+    """Acceptance gate: the shipped tree produces no new C/B findings,
+    and the proof notes report at least one packed-key site with its
+    binding constraint."""
+    findings, notes = run_semantic(REPO_ROOT)
+    new = filter_new(findings, load_baseline(BASELINE))
+    assert new == [], "\n".join(f.render() for f in new)
+    assert any("packed-key site(s) proven within int64" in n
+               for n in notes)
+    assert any("int64 binds at |V|" in n for n in notes)
+
+
+# ---------------------------------------------------------------------
+# SARIF export
+# ---------------------------------------------------------------------
+
+def test_to_sarif_structure():
+    fs = [Finding("src/x.py", 12, "C001", "msg", "do it", "snip"),
+          Finding("src/y.py", 0, "B002", "msg2", "", "snip2")]
+    doc = to_sarif(fs, tool_version="1.2")
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    assert run["tool"]["driver"]["name"] == "repro-analysis"
+    assert [r["id"] for r in run["tool"]["driver"]["rules"]] == \
+        ["B002", "C001"]
+    res = {r["ruleId"]: r for r in run["results"]}
+    loc = res["C001"]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/x.py"
+    assert loc["region"]["startLine"] == 12
+    # line-0 (whole-file) findings clamp to a valid SARIF region
+    assert res["B002"]["locations"][0]["physicalLocation"]["region"][
+        "startLine"] == 1
+    assert res["C001"]["partialFingerprints"]["reproAnalysis/v1"] == \
+        fs[0].fingerprint
+    assert "hint: do it" in res["C001"]["message"]["text"]
+
+
+# ---------------------------------------------------------------------
+# baseline pruning (--update-baseline)
+# ---------------------------------------------------------------------
+
+def test_update_baseline_keeps_justifications_and_prunes(tmp_path):
+    f1 = Finding("a.py", 3, "C002", "m", "h", "snippet-one")
+    f2 = Finding("b.py", 9, "B001", "m2", "h", "snippet-two")
+    path = tmp_path / "bl.json"
+    write_baseline(path, [f1], justification="reviewed: fixture")
+    assert update_baseline(path, [f1, f2]) == (1, 1, 0)
+    doc = json.loads(path.read_text())
+    by_fp = {e["fingerprint"]: e["justification"]
+             for e in doc["findings"]}
+    assert by_fp[f1.fingerprint] == "reviewed: fixture"
+    # f1 gets fixed: its fingerprint is pruned, f2's entry survives
+    assert update_baseline(path, [f2]) == (1, 0, 1)
+    doc = json.loads(path.read_text())
+    assert [e["fingerprint"] for e in doc["findings"]] == [f2.fingerprint]
+
+
+# ---------------------------------------------------------------------
+# trace-audit lowering cache (stub checks: no real lowering)
+# ---------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ta():
+    from repro.analysis import trace_audit
+    return trace_audit
+
+
+def test_trace_cache_hit_miss_and_invalidation(tmp_path, ta):
+    dep = tmp_path / "dep.py"
+    dep.write_text("x = 1\n")
+    calls = []
+    finding = Finding("k.py", 1, "T001", "m", "h", "snip")
+
+    def chk(notes):
+        calls.append(1)
+        notes.append("lowered")
+        return [finding]
+
+    checks = [("fake_check", chk, ("dep.py",))]
+    cache_dir = tmp_path / "cache"
+    f1, n1, h1, m1 = ta._run_checks_cached(tmp_path, checks, cache_dir,
+                                           True)
+    assert (h1, m1) == (0, 1) and f1 == [finding] and "lowered" in n1
+    f2, n2, h2, m2 = ta._run_checks_cached(tmp_path, checks, cache_dir,
+                                           True)
+    assert (h2, m2) == (1, 0) and len(calls) == 1
+    assert f2 == [finding] and "lowered" in n2  # replay is lossless
+    dep.write_text("x = 2\n")  # source churn invalidates the key
+    _, _, h3, m3 = ta._run_checks_cached(tmp_path, checks, cache_dir,
+                                         True)
+    assert (h3, m3) == (0, 1) and len(calls) == 2
+    # disabled cache always re-runs
+    _, _, h4, m4 = ta._run_checks_cached(tmp_path, checks, None, False)
+    assert (h4, m4) == (0, 1) and len(calls) == 3
+
+
+def test_trace_cache_skips_unresolvable_deps(tmp_path, ta):
+    calls = []
+
+    def chk(notes):
+        calls.append(1)
+        return []
+
+    checks = [("ghost", chk, ("no/such/dir",))]
+    cache_dir = tmp_path / "cache"
+    for _ in range(2):  # uncacheable: misses both times
+        _, _, h, m = ta._run_checks_cached(tmp_path, checks, cache_dir,
+                                           True)
+        assert (h, m) == (0, 1)
+    assert len(calls) == 2
+    assert not (cache_dir / "trace_audit.json").exists()
+
+
+# ---------------------------------------------------------------------
+# CLI: --layer semantic, --sarif, --update-baseline
+# ---------------------------------------------------------------------
+
+def _cli(args, timeout=240):
+    env = {**os.environ, "PYTHONPATH": str(REPO_ROOT / "src")}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def test_cli_semantic_layer_clean_on_repo():
+    r = _cli(["--layer", "semantic", "--root", str(REPO_ROOT)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK: no new findings" in r.stdout
+    assert "packed-key site(s) proven within int64" in r.stdout
+
+
+def _seed_bad_tree(tmp_path):
+    bad_root = tmp_path / "badrepo"
+    (bad_root / "src/repro/core").mkdir(parents=True)
+    (bad_root / "src/repro/core/rogue.py").write_text(textwrap.dedent("""\
+        def submit_update(eng, add, remove):
+            apply_engine_updates(eng, add, remove)
+        """))
+    return bad_root
+
+
+def test_cli_semantic_fails_on_seeded_violation_with_sarif(tmp_path):
+    bad_root = _seed_bad_tree(tmp_path)
+    sarif = tmp_path / "out.sarif"
+    r = _cli(["--layer", "semantic", "--root", str(bad_root),
+              "--baseline", str(tmp_path / "bl.json"),
+              "--sarif", str(sarif)])
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "src/repro/core/rogue.py:1" in r.stdout
+    assert "C002" in r.stdout
+    doc = json.loads(sarif.read_text())
+    assert doc["version"] == "2.1.0"
+    results = doc["runs"][0]["results"]
+    assert results and results[0]["ruleId"] == "C002"
+    assert results[0]["partialFingerprints"]["reproAnalysis/v1"]
+
+
+def test_cli_update_baseline_prunes_stale_entries(tmp_path):
+    bad_root = _seed_bad_tree(tmp_path)
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"findings": [{
+        "fingerprint": "stale:R001:deadbeefdeadbeef",
+        "file": "gone.py", "rule": "R001", "message": "fixed long ago",
+        "justification": "obsolete",
+    }]}))
+    r = _cli(["--layer", "semantic", "--root", str(bad_root),
+              "--baseline", str(bl), "--update-baseline"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "1 stale fingerprint(s) pruned" in r.stdout
+    doc = json.loads(bl.read_text())
+    fps = [e["fingerprint"] for e in doc["findings"]]
+    assert fps and all("deadbeef" not in fp for fp in fps)
+    assert all(e["rule"] == "C002" for e in doc["findings"])
+    # the refreshed baseline now grandfathers the violation
+    r = _cli(["--layer", "semantic", "--root", str(bad_root),
+              "--baseline", str(bl)])
+    assert r.returncode == 0, r.stdout + r.stderr
