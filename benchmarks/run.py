@@ -71,6 +71,8 @@ SUITES = {
                                   fromlist=["run"]).run(),
     "serving": lambda: __import__("benchmarks.serving",
                                   fromlist=["run"]).run(),
+    "replay": lambda: __import__("benchmarks.replay",
+                                 fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -43,6 +43,29 @@ default: every span call site is one global read + branch) over the
 same with the call sites hard-bypassed (``repro.obs.trace.bypass()``,
 the closest runtime stand-in for deleting the instrumentation).
 
+    serving/<engine>/recorder_on_overhead
+
+— the same construction for the always-on flight recorder: the default
+bounded ring buffer over a scheduler with the recording path disabled
+entirely (the pre-recorder baseline).  Gated by the same absolute
+< 1.02 bound.
+
+Histogram cross-check (the ``--json`` fix): the end-to-end percentiles
+are *also* re-derived from the scheduler's log-bucketed
+``rpq_e2e_seconds`` histogram and asserted within its documented
+``sqrt(growth)`` factor of the exact sample percentiles — the raw rows
+and the ``metrics_snapshot()`` exposition can no longer silently
+disagree:
+
+    serving/<engine>/qps<q>/slot_hist_p50_ms   (and _p99_ms)
+
+Admission-policy comparison (informational, never gated): preempt rate
+of one deadline-mixed burst under FIFO vs earliest-deadline-first
+admission on identically-fresh engines:
+
+    serving/<engine>/admission_fifo_preempt_rate
+    serving/<engine>/admission_edf_preempt_rate
+
 ``--smoke`` / BENCH_SMOKE=1 shrinks the fixture and trace for CI.
 ``--trace PATH`` / ``--metrics PATH`` additionally run a small traced
 demo over BOTH engines and export the Chrome trace-event JSON and a
@@ -90,14 +113,21 @@ def _arrivals(n, qps, rng):
     return [float(x) for x in t]
 
 
-def _run_slot(eng, queries, arrivals, max_slots=8):
+def _run_slot(eng, queries, arrivals, max_slots=8, prep=None,
+              **sched_kwargs):
     """Serve the trace through the slot scheduler; per-request latency =
     ticket completion - scheduled arrival (includes queueing).  Returns
-    (latencies, settled tickets) — the tickets carry the per-phase
-    attribution (``stats.queue_wait_s`` / ``service_s``)."""
+    (latencies, settled tickets, scheduler) — the tickets carry the
+    per-phase attribution (``stats.queue_wait_s`` / ``service_s``), the
+    scheduler its metrics registry and flight recorder.  ``prep`` (if
+    given) runs on the freshly built scheduler before serving; extra
+    keyword arguments reach the :class:`SlotScheduler` constructor
+    (``recorder_capacity``, ``admission_policy``, ...)."""
     from repro.core.scheduler import SlotScheduler
     sched = SlotScheduler(eng, max_slots=max_slots,
-                          max_queue=len(queries) + 1)
+                          max_queue=len(queries) + 1, **sched_kwargs)
+    if prep is not None:
+        prep(sched)
     n = len(queries)
     tickets = [None] * n
     lat = [0.0] * n
@@ -114,7 +144,7 @@ def _run_slot(eng, queries, arrivals, max_slots=8):
             time.sleep(max(0.0, arrivals[i] - (time.monotonic() - t0)))
     for j in range(n):
         lat[j] = tickets[j].finished_at - t0 - arrivals[j]
-    return lat, tickets
+    return lat, tickets, sched
 
 
 def _run_bucket(eng, queries, arrivals, max_batch=32, max_wait_s=0.004):
@@ -156,6 +186,43 @@ def _pct(lat, q):
     return sorted(lat)[min(len(lat) - 1, int(q * len(lat)))]
 
 
+def _exact_pct(samples, q):
+    """Exact sample quantile under the histogram's rank convention
+    (the ``ceil(q*n)``-th smallest observation) — the comparable ground
+    truth for :meth:`repro.obs.metrics.Histogram.quantile`."""
+    import math
+    s = sorted(samples)
+    return s[max(0, math.ceil(q * len(s)) - 1)]
+
+
+def _hist_check(tag, tickets, sched, rows):
+    """The ``--json`` fix: this module re-derives latency percentiles
+    from raw samples while ``metrics_snapshot()`` reports the
+    log-bucketed ``rpq_e2e_seconds`` histogram.  Emit BOTH and assert
+    they agree within the estimator's documented ``sqrt(growth)``
+    factor (see ``Histogram.quantile``) — a disagreement means the
+    Prometheus exposition is lying about the tail and fails the suite
+    loudly (surfaces as ``serving/ERROR``)."""
+    import math
+    h = sched.metrics.histogram("rpq_e2e_seconds")
+    samples = [t.finished_at - t.submitted_at for t in tickets]
+    bound = math.sqrt(h.growth) * (1 + 1e-9)
+    for q, name in ((0.50, "p50"), (0.99, "p99")):
+        est = h.quantile(q)
+        exact = _exact_pct(samples, q)
+        rows.append((f"{tag}/slot_hist_{name}_ms", est * 1e3))
+        # below min_value every observation shares bucket 0 and the
+        # factor guarantee does not apply (never the case for real
+        # end-to-end latencies, but keep the gate honest)
+        if exact <= h.min_value:
+            continue
+        if not (exact / bound <= est <= exact * bound):
+            raise RuntimeError(
+                f"{tag}: histogram {name} {est * 1e3:.4f}ms disagrees "
+                f"with exact {exact * 1e3:.4f}ms beyond the "
+                f"sqrt(growth)={bound:.4f} bound")
+
+
 def _tracer_off_overhead(eng, queries, reps=2):
     """Price the disabled instrumentation: mean burst slot latency with
     the module tracer off (production default — every span call site is
@@ -168,7 +235,7 @@ def _tracer_off_overhead(eng, queries, reps=2):
     def mean_lat(ctx):
         with ctx:
             eng.results.clear()
-            lat, _ = _run_slot(eng, queries, burst)
+            lat, _, _ = _run_slot(eng, queries, burst)
         return sum(lat) / len(lat)
 
     off, byp = [], []
@@ -176,6 +243,56 @@ def _tracer_off_overhead(eng, queries, reps=2):
         off.append(mean_lat(contextlib.nullcontext()))
         byp.append(mean_lat(otrace.bypass()))
     return min(off) / max(min(byp), 1e-9)
+
+
+def _recorder_on_overhead(eng, queries, reps=2):
+    """Price the always-on flight recorder the same way: mean burst
+    slot latency with the default bounded ring buffer over the same run
+    with the whole recording path disabled (no record dicts built, no
+    ring writes — the closest runtime stand-in for the pre-recorder
+    scheduler).  Interleaved best-of-``reps`` on the same warmed
+    engine, mirroring :func:`_tracer_off_overhead`."""
+    burst = [0.0] * len(queries)
+
+    def _disable(sched):
+        sched._record_ticket = lambda *a, **k: None
+
+    def mean_lat(prep):
+        eng.results.clear()
+        lat, _, _ = _run_slot(eng, queries, burst, prep=prep)
+        return sum(lat) / len(lat)
+
+    on, off = [], []
+    for _ in range(reps):
+        on.append(mean_lat(None))
+        off.append(mean_lat(_disable))
+    return min(on) / max(min(off), 1e-9)
+
+
+def _admission_compare(g, kind, queries, service_p50_s):
+    """One deadline-mixed burst under FIFO vs earliest-deadline-first
+    admission on identically-fresh single-slot schedulers: alternate
+    requests carry a deadline a few median service times out, so FIFO
+    lets them expire in the queue behind deadline-less traffic while
+    EDF pulls them forward.  Returns ``{policy: preempt_rate}`` —
+    informational rows (the rate is fixture- and load-dependent, so it
+    never gates), the FIFO-vs-EDF gap is the point."""
+    from repro.core.engines import make_engine
+    from repro.core.scheduler import SlotScheduler
+    deadline_s = max(1e-3, 8.0 * service_p50_s)
+    out = {}
+    for policy in ("fifo", "edf"):
+        eng = make_engine(g, kind)
+        eng.eval_many(queries)          # compiles out of the timed burst
+        eng.results.clear()
+        sched = SlotScheduler(eng, max_slots=1,
+                              max_queue=len(queries) + 1,
+                              admission_policy=policy)
+        for i, q in enumerate(queries):
+            sched.submit(q, deadline_s=deadline_s if i % 2 else None)
+        sched.drain()
+        out[policy] = sched.preempted / max(1, len(queries))
+    return out
 
 
 def _traced_demo(trace_path, metrics_path):
@@ -260,7 +377,7 @@ def run():
                 eng.results.clear()
                 out = runner(eng, queries, arrivals)
                 if mode == "slot":
-                    per_mode[mode], slot_tickets = out
+                    per_mode[mode], slot_tickets, slot_sched = out
                     overhead_eng = eng   # warmed + slot-shaped: reuse below
                 else:
                     per_mode[mode] = out
@@ -279,9 +396,21 @@ def run():
                              _pct(vals, 0.50) * 1e3))
                 rows.append((f"{tag}/slot_{phase}_p99_ms",
                              _pct(vals, 0.99) * 1e3))
+            # raw-vs-histogram percentile reconciliation (raises on
+            # disagreement beyond the estimator's documented factor)
+            _hist_check(tag, slot_tickets, slot_sched, rows)
         if overhead_eng is not None:
             rows.append((f"serving/{kind}/tracer_off_overhead",
                          _tracer_off_overhead(overhead_eng, queries)))
+            rows.append((f"serving/{kind}/recorder_on_overhead",
+                         _recorder_on_overhead(overhead_eng, queries)))
+            # admission-policy comparison on a bounded subset (the ring
+            # serves ~2 q/s — keep the extra burst affordable)
+            sub = queries[:min(n, 16)]
+            p50 = _exact_pct([t.stats.service_s for t in slot_tickets], 0.50)
+            for policy, rate in _admission_compare(g, kind, sub, p50).items():
+                rows.append((f"serving/{kind}/admission_{policy}"
+                             "_preempt_rate", rate))
     return rows
 
 

@@ -25,12 +25,22 @@ scheduler landed, this is *continuous* batching, not bucket flushing:
     *snapshot isolation per query*: the live overlay is swapped for a
     copy-on-write clone before the mutation applies, so in-flight slots
     keep reading their admission epoch — writes never stall reads, and
-    every ticket records the epoch its answer is exact at.
+    every ticket records the epoch its answer is exact at;
+  * the AsyncServer's HTTP sidecar serves ``/metrics`` (Prometheus),
+    ``/flight`` (the always-on flight-recorder ring as a versioned
+    JSONL workload), and ``/explain?expr=...`` (per-query plan report)
+    — the timed wave scrapes all three;
+  * ``--record PATH`` dumps the timed wave's flight recorder as a
+    replayable workload (``python -m benchmarks.replay --workload
+    PATH``); ``--explain`` prints a full EXPLAIN and ANALYZE report for
+    one representative request.
 """
 import argparse
 import asyncio
+import json
 import sys
 import time
+from urllib.parse import quote
 
 sys.path.insert(0, "src")
 
@@ -47,6 +57,14 @@ _ap.add_argument("--trace", default=None, metavar="PATH",
                  help="enable the obs span tracer for the timed waves and "
                       "export Chrome trace-event JSON to PATH (open in "
                       "Perfetto / chrome://tracing)")
+_ap.add_argument("--record", default=None, metavar="PATH",
+                 help="dump the timed wave's flight recorder as a "
+                      "versioned JSONL workload (replay it with "
+                      "`python -m benchmarks.replay --workload PATH`)")
+_ap.add_argument("--explain", action="store_true",
+                 help="print an EXPLAIN (plan only, no execution) and an "
+                      "ANALYZE (plan + per-superstep timeline) report for "
+                      "one representative request")
 ARGS = _ap.parse_args()
 if ARGS.force_host_devices:
     # per-flag setdefault (repro.launch.env imports no jax): appending to
@@ -113,13 +131,17 @@ def main():
         # the serving spans
         obs.trace.TRACER.enable()
 
-    # the timed wave also exercises the Prometheus endpoint: the
-    # AsyncServer binds a free port (metrics_port=0) and we scrape it
-    # over plain HTTP once the wave settles
+    # the timed wave also exercises the HTTP sidecar: the AsyncServer
+    # binds a free port (metrics_port=0) and we scrape /metrics,
+    # /flight, and /explain over plain HTTP once the wave settles
     sched = SlotScheduler(eng, max_slots=ARGS.slots)
+    targets = ("/metrics", "/flight",
+               "/explain?expr=" + quote(queries[0].expr, safe="")
+               + f"&obj={queries[0].obj}")
     t0 = time.time()
     answers, lat, tickets, scraped = asyncio.run(
-        _run_wave(sched, queries, stagger_s=0.002, metrics_port=0))
+        _run_wave(sched, queries, stagger_s=0.002, metrics_port=0,
+                  scrape=targets))
     dt = time.time() - t0
     print(f"served {len(queries)} RPQ requests ({len(exprs)} mixed exprs) "
           f"through {ARGS.slots} continuous-batching slots: "
@@ -139,9 +161,46 @@ def main():
 
     print("scheduler metrics, scraped from the AsyncServer endpoint "
           "(Prometheus text exposition):")
-    body = scraped.split("\r\n\r\n", 1)[1]
+    body = scraped["/metrics"].split("\r\n\r\n", 1)[1]
     print("\n".join(line for line in body.splitlines()
                     if line and not line.startswith("#")))
+
+    # /flight serves the recorder ring as the versioned JSONL workload
+    flight = scraped["/flight"].split("\r\n\r\n", 1)[1]
+    fh = json.loads(flight.splitlines()[0])
+    print(f"flight recorder over /flight: {fh['records']} records "
+          f"(kind {fh['kind']} v{fh['version']}, "
+          f"{fh['appended']} appended / {fh['dropped']} dropped)")
+    plan = json.loads(scraped[targets[2]].split("\r\n\r\n", 1)[1])
+    print(f"plan report over /explain for {queries[0].expr!r}: "
+          f"mode {plan['plan']['mode']}, "
+          f"{plan['automaton']['states']} automaton states, "
+          f"est frontier {plan['plan']['est_frontier']}")
+
+    if ARGS.record:
+        # epoch-0 capture (pre-update waves): replays bit-for-bit against
+        # the same fixture spec carried in the header
+        sched.recorder.dump(ARGS.record, graph={
+            "fixture": "scale_free_graph", "args": [3000, 8, 24000],
+            "seed": 23})
+        print(f"recorded {sched.recorder.occupancy} settled queries to "
+              f"{ARGS.record} — replay with "
+              f"`python -m benchmarks.replay --workload {ARGS.record}`")
+
+    if ARGS.explain:
+        q = queries[0]
+        print(f"EXPLAIN {q.expr!r} (plan only, no execution):")
+        print(json.dumps(eng.explain(q), indent=2, sort_keys=True))
+        report = eng.explain(q, analyze=True)
+        tl = report["execution"]["timeline"]
+        print(f"ANALYZE {q.expr!r}: {report['execution']['results']} pairs "
+              f"in {report['execution']['elapsed_ms']:.2f} ms, "
+              f"{report['execution']['supersteps']} supersteps, "
+              f"frontier est {report['execution']['est_frontier']} vs "
+              f"actual {report['execution']['actual_frontier']} "
+              f"(error {report['execution']['frontier_error']:+.2f}); "
+              f"timeline frontiers "
+              f"{[row['frontier'] for row in tl]}")
 
     # replay the exact stream: every answer comes from the result cache
     res_h0, res_m0 = eng.results.hits, eng.results.misses
@@ -238,17 +297,21 @@ def main():
 
 
 async def _run_wave(sched: SlotScheduler, queries, stagger_s: float,
-                    metrics_port=None):
+                    metrics_port=None, scrape=("/metrics",)):
+    """Serve the wave; with a bound sidecar port, also scrape each
+    ``scrape`` target over plain HTTP -> {target: raw response}."""
     async with AsyncServer(sched, metrics_port=metrics_port) as server:
         answers, lat, tickets = await _serve_wave(server, queries, stagger_s)
         scraped = None
         if metrics_port is not None:
+            scraped = {}
             host, port = server.metrics_addr
-            reader, writer = await asyncio.open_connection(host, port)
-            writer.write(b"GET /metrics HTTP/1.0\r\n\r\n")
-            await writer.drain()
-            scraped = (await reader.read()).decode()
-            writer.close()
+            for target in scrape:
+                reader, writer = await asyncio.open_connection(host, port)
+                writer.write(f"GET {target} HTTP/1.0\r\n\r\n".encode())
+                await writer.drain()
+                scraped[target] = (await reader.read()).decode()
+                writer.close()
         return answers, lat, tickets, scraped
 
 

@@ -1,6 +1,6 @@
 """Repo-specific AST lint rules (layer 2 of the static analyzer).
 
-Six rules encode invariants that ordinary linters cannot see because
+Seven rules encode invariants that ordinary linters cannot see because
 they are about *this* codebase's determinism and device-dispatch
 contracts:
 
@@ -34,6 +34,13 @@ R006  raw wall-clock reads (``time.perf_counter()`` /
       the obs layer — route it through ``repro.obs.trace.span(...)``
       (attributable, exportable, free when disabled) or the scheduler's
       injectable ``clock``.
+R007  ad-hoc per-superstep counters: a ``+=`` into a subscripted
+      counter-ish dict (name contains ``count``/``counter``/``tally``/
+      ``metric``) inside a dispatching ``while`` loop in
+      ``src/repro/core/``.  Such tallies are invisible to
+      ``prometheus_text()``, the flight recorder, and ANALYZE — route
+      them through the obs registry (``self.metrics.counter(...)``) or
+      the per-query ``QueryStats``.
 
 Findings can be suppressed inline with ``# repro: noqa R00X`` on the
 flagged line (justification after an em-dash is encouraged), or
@@ -524,11 +531,61 @@ def _rule_r006(tree: ast.Module, rel: str,
 
 
 # ---------------------------------------------------------------------
+# R007: ad-hoc per-superstep counters inside core loops
+# ---------------------------------------------------------------------
+
+_COUNTER_NAME_TOKENS = ("count", "counter", "tally", "metric")
+
+
+def _counterish_base(node: ast.expr) -> Optional[str]:
+    """Name of a subscripted container that smells like a counter."""
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    else:
+        return None
+    low = name.lower()
+    if any(tok in low for tok in _COUNTER_NAME_TOKENS):
+        return name
+    return None
+
+
+def _rule_r007(tree: ast.Module, rel: str,
+               lines: Sequence[str]) -> Iterable[Finding]:
+    # engine/scheduler internals only — benchmarks and examples keep
+    # local tallies by design (they ARE the consumer of their numbers)
+    if not rel.replace("\\", "/").startswith("src/repro/core/"):
+        return
+    hint = ("route the per-superstep tally through the obs registry "
+            "(self.metrics.counter(...).inc()) or the per-query "
+            "QueryStats so prometheus_text(), the flight recorder, and "
+            "ANALYZE all see it")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.While):
+            continue
+        body = [n for stmt in node.body for n in ast.walk(stmt)]
+        if not any(isinstance(c, ast.Call) and
+                   _is_dispatch_name(_call_name(c.func)) for c in body):
+            continue
+        for n in body:
+            if isinstance(n, ast.AugAssign) and \
+                    isinstance(n.target, ast.Subscript):
+                name = _counterish_base(n.target.value)
+                if name:
+                    yield Finding(rel, n.lineno, "R007",
+                                  f"ad-hoc counter dict '{name}' bumped "
+                                  "inside a superstep loop — invisible to "
+                                  "the obs registry",
+                                  hint, _snippet(lines, n.lineno))
+
+
+# ---------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------
 
 _PER_FILE_RULES = (_rule_r001, _rule_r002, _rule_r004, _rule_r005,
-                   _rule_r006)
+                   _rule_r006, _rule_r007)
 
 
 def lint_file(path: Path, rel: str) -> List[Finding]:

@@ -72,7 +72,8 @@ from . import regex as rx
 from ..obs import trace as otrace
 from .engines import (PlanCache, QueryLike, QueryStats, ResultCache,
                       TraceTracker, as_query, normalized_key,
-                      probe_result_cache, publish_result, truncate_result)
+                      probe_result_cache, publish_result, result_key,
+                      truncate_result)
 from .glushkov import Glushkov
 from .ring import LabeledGraph
 from .stats import GraphStats
@@ -254,25 +255,44 @@ def _bfs_chunk_hetero(subj, pred, obj, Bstk, PREDstk, frontier, visited,
 
 
 def _host_stepped(chunk_fn, tables, start_planes, num_nodes, max_steps,
-                  deadline):
+                  deadline, collector=None):
     """Drive compiled superstep chunks from the host, checking
     ``deadline`` (absolute seconds) between chunks — raises the same
     ``TimeoutError`` the ring engine uses.  Returns (visited, steps).
     The fixed chunk size keeps compiled shapes stable; overshooting
     ``max_steps`` by a partial chunk is harmless (the fixpoint is
-    monotone, converged chunks are no-ops)."""
+    monotone, converged chunks are no-ops).
+
+    ``collector`` (ANALYZE, :mod:`repro.obs.explain`) drops the chunk
+    size to 1 so every trip IS one superstep, and appends a
+    ``{"frontier", "activations"}`` row per superstep — the extra
+    device syncs are the price of the timeline and exist only on the
+    analyzing path."""
     import time as _time
     frontier = visited = jnp.asarray(start_planes)
     it = 0
+    steps = 1 if collector is not None else _DEADLINE_CHUNK
     while it < max_steps and bool(jnp.any(frontier > 0)):
         if deadline is not None and _time.time() > deadline:
             raise TimeoutError("query deadline exceeded")
-        frontier, visited, done = chunk_fn(
-            *tables, frontier, visited, num_nodes, _DEADLINE_CHUNK)
+        if collector is not None:
+            fin = int((frontier > 0).sum())   # repro: noqa R002 — ANALYZE-only sync
+            vin = int((visited > 0).sum())    # repro: noqa R002 — ANALYZE-only sync
+        with otrace.span("dense.bfs_chunk", cat="kernel", steps=steps):
+            frontier, visited, done = chunk_fn(
+                *tables, frontier, visited, num_nodes, steps)
+            if collector is not None:
+                # block inside the span so kernel_ms covers the dispatch
+                done = int(done)              # repro: noqa R002 — ANALYZE-only sync
         # the chunk-count sync IS the deadline design: the loop test
         # already blocks on this chunk's result, so reading `done` adds
         # no extra device round-trip
         it += int(done)  # repro: noqa R002 — deadline loop syncs per chunk by design
+        if collector is not None and done:
+            collector.append({
+                "frontier": fin,
+                "activations": int((visited > 0).sum()) - vin,  # repro: noqa R002 — ANALYZE-only sync
+            })
     return visited, it
 
 
@@ -359,6 +379,7 @@ class DenseRPQ(dl.LiveUpdateEngine):
         self._edge_off: Optional[np.ndarray] = None
         self._edge_eff: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._deadline: Optional[float] = None      # absolute, per eval call
+        self._analyze = None        # ANALYZE superstep collector (obs.explain)
         self._superstep_acc = 0     # host-stepped/sharded superstep count
         self.sharded = None
         if mesh is not None or shards is not None:
@@ -558,7 +579,10 @@ class DenseRPQ(dl.LiveUpdateEngine):
             return np.zeros(V, dtype=bool)
         subj, pred, obj = self._edges()
         max_steps = V * (g.m + 1) + 1
-        if self.sharded is not None:
+        # ANALYZE routes to the host-stepped loop (chunk=1, per-superstep
+        # collector) even when sharded — results are identical (the
+        # sharded parity property), only the dispatch site moves
+        if self.sharded is not None and self._analyze is None:
             B_host, PRED_host = plan.host_tables()
             self.traces.record("sharded_rows", 1, g.m + 1)
             visited, it = self.sharded.run_rows(
@@ -569,11 +593,12 @@ class DenseRPQ(dl.LiveUpdateEngine):
             )
             self._superstep_acc += it
             return visited[0, :, 0] > 0
-        if self._deadline is not None:
+        if self._deadline is not None or self._analyze is not None:
             self.traces.record("bfs_chunk", V, g.m + 1)
             visited, it = _host_stepped(
                 _bfs_chunk, (subj, pred, obj, plan.B, plan.PRED),
                 self._start_planes(g, objs), V, max_steps, self._deadline,
+                collector=self._analyze,
             )
             self._superstep_acc += it
             return np.asarray(visited[:, 0]) > 0
@@ -598,13 +623,14 @@ class DenseRPQ(dl.LiveUpdateEngine):
         Bsz = batch_size or self.source_batch
         S = g.m + 1
         frow = _start_row(g)
-        if self.sharded is not None:
+        use_sharded = self.sharded is not None and self._analyze is None
+        if use_sharded:
             B_host, PRED_host = plan.host_tables()
             Bstk = np.broadcast_to(B_host, (Bsz,) + B_host.shape)
             PREDstk = np.broadcast_to(PRED_host, (Bsz,) + PRED_host.shape)
         for i in range(0, len(starts), Bsz):
             chunk = np.asarray(starts[i : i + Bsz], dtype=np.int64)
-            if self.sharded is not None:
+            if use_sharded:
                 # pad the tail chunk so the compiled sharded step is
                 # reused across batches; zero rows converge immediately.
                 # table_key: the device tables are identical per (plan,
@@ -621,12 +647,13 @@ class DenseRPQ(dl.LiveUpdateEngine):
                 continue
             planes = np.zeros((len(chunk), V, S), dtype=np.int8)
             planes[np.arange(len(chunk)), chunk] = frow
-            if self._deadline is not None:
+            if self._deadline is not None or self._analyze is not None:
                 self.traces.record("bfs_chunk_batched", len(chunk), V, S)
                 visited, it = _host_stepped(
                     _bfs_chunk_batched,
                     (subj, pred, obj, plan.B, plan.PRED),
                     planes, V, V * S + 1, self._deadline,
+                    collector=self._analyze,
                 )
                 self._superstep_acc += it
             else:
@@ -688,20 +715,21 @@ class DenseRPQ(dl.LiveUpdateEngine):
                     Bstk[r, :, :S] = B_host
                     PREDstk[r, :S, :S] = PRED_host
                     planes[r, start, :S] = _start_row(plan.g)
-                if self.sharded is not None:
+                if self.sharded is not None and self._analyze is None:
                     self.traces.record("sharded_rows", Bsz, S_pad)
                     visited, it = self.sharded.run_rows(
                         Bstk, PREDstk, planes, V * S_pad + 1,
                         deadline=self._deadline,
                     )
                     self._superstep_acc += it
-                elif self._deadline is not None:
+                elif self._deadline is not None or self._analyze is not None:
                     self.traces.record("bfs_chunk_hetero", Bsz, S_pad)
                     visited, it = _host_stepped(
                         _bfs_chunk_hetero,
                         (subj, pred, obj, jnp.asarray(Bstk),
                          jnp.asarray(PREDstk)),
                         planes, V, V * S_pad + 1, self._deadline,
+                        collector=self._analyze,
                     )
                     self._superstep_acc += it
                 else:
@@ -795,6 +823,16 @@ class DenseRPQ(dl.LiveUpdateEngine):
             return self._eval_inner(expr, subject, obj, limit, stats)
         finally:
             self._deadline = prev_deadline
+
+    def explain(self, query, analyze: bool = False,
+                deadline_s: Optional[float] = None) -> Dict:
+        """Structured plan report for ``query`` (see
+        :mod:`repro.obs.explain`).  ``analyze=False`` never executes a
+        superstep; ``analyze=True`` runs the query under a private
+        tracer and attaches the per-superstep timeline."""
+        from ..obs import explain as oexplain
+        return oexplain.explain_query(self, query, analyze=analyze,
+                                      deadline_s=deadline_s)
 
     def _eval_inner(self, expr, subject, obj, limit, stats):
         ast = rx.parse(expr)
@@ -913,6 +951,31 @@ class DenseRPQ(dl.LiveUpdateEngine):
     def _eval_many_inner(self, qs, results, batch_size, deadline):
         import time as _time
         epoch = self.epoch
+
+        # ANALYZE-tagged queries run individually under a private tracer
+        # (the per-superstep timeline is per-query by construction) and
+        # settle before the probe; they still share the batch deadline.
+        if any(q.explain is not None for q in qs):
+            from ..obs import explain as oexplain
+            for i, q in enumerate(qs):
+                if q.explain is None:
+                    continue
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - _time.time()
+                    if remaining <= 0:
+                        raise TimeoutError("query deadline exceeded")
+                report, res = oexplain.analyze_query(
+                    self, q, deadline_s=remaining)
+                oexplain.deliver(q.explain, report)
+                results[i] = res
+                # publish like any other settled query: the explain tag
+                # is excluded from the cache key, so an untagged repeat
+                # of the same query replays from the cache
+                self.results.put(result_key(q), res,
+                                 footprint=self._footprint(rx.parse(q.expr)),
+                                 epoch=self.epoch)
+
         pending = probe_result_cache(self.results, qs, results)
 
         rows: List[Tuple[_DensePlan, int]] = []

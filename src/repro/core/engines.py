@@ -42,12 +42,20 @@ from ..obs import trace as otrace
 
 @dataclass(frozen=True)
 class Query:
-    """One 2RPQ request; ``None`` endpoint = variable."""
+    """One 2RPQ request; ``None`` endpoint = variable.
+
+    ``explain`` opts the request into ANALYZE: the engine executes it
+    under a private tracer and delivers a per-superstep report (see
+    :mod:`repro.obs.explain`) to the sink — an
+    :class:`~repro.obs.explain.ExplainSink`, any callable, or a dict.
+    Excluded from equality/hashing so explain-tagged requests still
+    share result-cache keys with their plain twins."""
 
     expr: str
     subject: Optional[int] = None
     obj: Optional[int] = None
     limit: Optional[int] = None
+    explain: Optional[Any] = field(default=None, compare=False, repr=False)
 
 
 QueryLike = Union[Query, str, Tuple]
@@ -485,6 +493,8 @@ def probe_result_cache(
     with otrace.span("cache.probe", cat="cache",
                      queries=len(queries)) as sp:
         for idx, q in enumerate(queries):
+            if results[idx] is not None:
+                continue   # already settled upstream (e.g. ANALYZE ran it)
             key = result_key(q)
             cached = cache.get_covering(key)
             if cached is not None:

@@ -88,7 +88,8 @@ from . import regex as rx
 from ..obs import trace as otrace
 from .engines import (PlanBundle, PlanCache, QueryLike, QueryStats,
                       ResultCache, TraceTracker, as_query, normalized_key,
-                      probe_result_cache, publish_result, truncate_result)
+                      probe_result_cache, publish_result, result_key,
+                      truncate_result)
 from .glushkov import Glushkov
 from .ring import Ring
 from .stats import GraphStats
@@ -295,6 +296,16 @@ class RingRPQ(dl.LiveUpdateEngine):
         ast = rx.parse(expr)
         return self.eval_ast(ast, subject, obj, limit, stats, deadline_s)
 
+    def explain(self, query, analyze: bool = False,
+                deadline_s: Optional[float] = None) -> Dict:
+        """Structured plan report for ``query`` (see
+        :mod:`repro.obs.explain`).  ``analyze=False`` never executes a
+        superstep; ``analyze=True`` runs the query under a private
+        tracer and attaches the per-superstep timeline."""
+        from ..obs import explain as oexplain
+        return oexplain.explain_query(self, query, analyze=analyze,
+                                      deadline_s=deadline_s)
+
     def eval_many(
         self,
         queries: Sequence[QueryLike],
@@ -335,6 +346,30 @@ class RingRPQ(dl.LiveUpdateEngine):
 
         def on_miss(idx):
             stats_list[idx].result_cache_misses += 1
+
+        # ANALYZE-tagged queries run individually under a private tracer
+        # (the per-superstep timeline is per-query by construction) and
+        # settle before the probe; they still share the batch deadline.
+        if any(q.explain is not None for q in qs):
+            from ..obs import explain as oexplain
+            for i, q in enumerate(qs):
+                if q.explain is None:
+                    continue
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - _time.time()
+                    if remaining <= 0:
+                        raise TimeoutError("query deadline exceeded")
+                report, res = oexplain.analyze_query(
+                    self, q, stats=stats_list[i], deadline_s=remaining)
+                oexplain.deliver(q.explain, report)
+                results[i] = res
+                # publish like any other settled query: the explain tag
+                # is excluded from the cache key, so an untagged repeat
+                # of the same query replays from the cache
+                self.results.put(result_key(q), res,
+                                 footprint=self._footprint(rx.parse(q.expr)),
+                                 epoch=self.epoch)
 
         pending = probe_result_cache(self.results, qs, results,
                                      on_hit=on_hit, on_miss=on_miss)
@@ -949,6 +984,7 @@ class RingStepper:
         # adjacency / tombstone lookups
         self.queue: deque = deque()
         self._pending: Dict[int, int] = {}   # id(job) -> queued entries
+        self._last_tasks = 0                 # task count of the last superstep
 
     # -- admission / retirement --------------------------------------------
     def add_job(self, job: _Job, ring: Optional[Ring] = None,
@@ -1018,9 +1054,22 @@ class RingStepper:
         remain queued."""
         if not self.queue:
             return False
-        with otrace.span("ring.superstep", cat="engine",
-                         entries=len(self.queue), jobs=len(self.jobs)):
+        sp = otrace.span("ring.superstep", cat="engine",
+                         entries=len(self.queue), jobs=len(self.jobs))
+        if sp is otrace.NULL_SPAN:        # tracer off: keep the hot path bare
             return self._step_impl(deadline)
+        with sp:
+            # per-superstep deltas for ANALYZE timelines; distinct stats
+            # objects (split plans share one across their jobs)
+            st = {id(j.stats): j.stats for j in self.jobs}.values()
+            act0 = sum(s.node_state_activations for s in st)
+            rep0 = sum(len(j.reported) for j in self.jobs)
+            more = self._step_impl(deadline)
+            st = {id(j.stats): j.stats for j in self.jobs}.values()
+            sp.set(activations=sum(s.node_state_activations for s in st) - act0,
+                   reported=sum(len(j.reported) for j in self.jobs) - rep0,
+                   tasks=self._last_tasks)
+            return more
 
     def _step_impl(self, deadline: Optional[float] = None) -> bool:
         rpq = self.rpq
@@ -1092,6 +1141,7 @@ class RingStepper:
 
         # ---- part 1.5: bit-parallel D-step for every task at once,
         # across ALL jobs/plans (and both task kinds) in one batch ----
+        self._last_tasks = len(tasks)
         steps = rpq._transition_many(tasks, self.bundle)
 
         # ---- parts 2+3, in task order (== each job's sequential FIFO

@@ -57,6 +57,7 @@ iterator of result pairs (and awaitable for the final set).
 from __future__ import annotations
 
 import asyncio
+import json
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -64,10 +65,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from . import delta as dl
 from . import regex as rx
-from .engines import (Query, QueryLike, QueryStats, as_query, result_key,
-                      truncate_result)
+from .engines import (Query, QueryLike, QueryStats, as_query, normalized_key,
+                      result_key, truncate_result)
 from ..obs import trace as otrace
 from ..obs.metrics import MetricsRegistry
+from ..obs.recorder import FlightRecorder
 
 __all__ = ["Backpressure", "QueryTicket", "SlotScheduler", "AsyncServer"]
 
@@ -236,17 +238,30 @@ class SlotScheduler:
     Knobs: ``max_slots`` (in-flight pool size), ``max_queue``
     (admission backpressure depth), ``steps_per_tick`` (dense: compiled
     supersteps per tick — streaming granularity vs dispatch overhead),
-    ``clock`` (injectable for deadline tests).
+    ``clock`` (injectable for deadline tests), ``admission_policy``
+    ("fifo", or "edf" = earliest deadline first with FIFO tie-break for
+    deadline-less tickets), ``recorder_capacity`` (the always-on flight
+    recorder's ring size; every settled ticket appends one compact
+    record, ``recorder.dump()`` writes a replayable JSONL workload —
+    see :mod:`repro.obs.recorder`; capacity 0 disables retention).
     """
 
     def __init__(self, engine, max_slots: int = 8, max_queue: int = 256,
                  steps_per_tick: int = 1,
                  clock: Callable[[], float] = time.monotonic,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 admission_policy: str = "fifo",
+                 recorder: Optional[FlightRecorder] = None,
+                 recorder_capacity: int = 4096):
         self.engine = engine
         self.max_slots = int(max_slots)
         self.max_queue = int(max_queue)
         self.clock = clock
+        if admission_policy not in ("fifo", "edf"):
+            raise ValueError(f"unknown admission_policy {admission_policy!r}")
+        self.admission_policy = admission_policy
+        self.recorder = recorder if recorder is not None \
+            else FlightRecorder(recorder_capacity)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._hist_queue_wait = self.metrics.histogram(
             "rpq_queue_wait_seconds", "submit -> slot admission")
@@ -284,6 +299,15 @@ class SlotScheduler:
         ``max_queue`` queries are already waiting."""
         if len(self.waiting) >= self.max_queue:
             self.rejected += 1
+            q = as_query(query)
+            self.recorder.append({
+                "ts": self.clock(), "key": None, "expr": q.expr,
+                "subject": q.subject, "obj": q.obj, "limit": q.limit,
+                "plan": "", "epoch": None, "status": "shed",
+                "results": None, "supersteps": None,
+                "queue_wait_s": 0.0, "service_s": 0.0, "supersteps_s": 0.0,
+                "preempted": False, "backpressure": True, "cache_hit": False,
+            })
             raise Backpressure(
                 f"admission queue full ({self.max_queue} waiting)")
         now = self.clock()
@@ -360,6 +384,27 @@ class SlotScheduler:
         m.gauge("rpq_waiting", "admission queue depth").set(len(self.waiting))
         m.gauge("rpq_peak_in_flight",
                 "high-water occupied slots").set(self.peak_in_flight)
+        # self-observability: the obs layer reports its own saturation
+        m.counter("rpq_tracer_dropped_events_total",
+                  "span events dropped at the tracer's max_events bound"
+                  ).value = otrace.TRACER.dropped
+        for cname, cache in (("result", getattr(self.engine, "results", None)),
+                             ("plan", getattr(self.engine, "plans", None)),
+                             ("decision",
+                              getattr(self.engine, "decisions", None))):
+            if cache is None:
+                continue
+            m.gauge(f"rpq_{cname}_cache_hit_rate",
+                    f"{cname} cache hits / probes (0 before first probe)"
+                    ).set(cache.hits / max(1, cache.hits + cache.misses))
+        m.gauge("rpq_recorder_occupancy",
+                "flight-recorder ring occupancy").set(self.recorder.occupancy)
+        m.counter("rpq_recorder_appended_total",
+                  "flight-recorder records ever appended"
+                  ).value = self.recorder.appended
+        m.counter("rpq_recorder_dropped_total",
+                  "flight-recorder records lost to ring overwrite"
+                  ).value = self.recorder.dropped
 
     def metrics_snapshot(self) -> Dict[str, Any]:
         """JSON-able registry snapshot (see
@@ -373,12 +418,35 @@ class SlotScheduler:
         return self.metrics.to_prometheus()
 
     # -- internals -----------------------------------------------------------
+    def _record_ticket(self, ticket: QueryTicket, status: str,
+                       cache_hit: bool = False) -> None:
+        """Append the settled ticket's compact record to the flight
+        recorder — one dict per settle, uniform keys across statuses."""
+        q, st = ticket.query, ticket.stats
+        try:
+            key = normalized_key(q.expr)
+        except Exception:
+            key = None   # unparseable expr: still record the failure
+        self.recorder.append({
+            "ts": ticket.finished_at, "key": key, "expr": q.expr,
+            "subject": q.subject, "obj": q.obj, "limit": q.limit,
+            "plan": st.plan_mode, "epoch": ticket.epoch, "status": status,
+            "results": st.results if status == "ok" else None,
+            "supersteps": st.supersteps,
+            "queue_wait_s": st.queue_wait_s, "service_s": st.service_s,
+            "supersteps_s": st.supersteps_s,
+            "preempted": status == "timeout", "backpressure": False,
+            "cache_hit": cache_hit,
+        })
+
     def _fail(self, ticket: QueryTicket, err: BaseException) -> None:
         ticket._error = err
         ticket.state = "failed"
         ticket.finished_at = self.clock()
         if ticket.admitted_at is not None:
             ticket.stats.service_s = ticket.finished_at - ticket.admitted_at
+        self._record_ticket(
+            ticket, "timeout" if isinstance(err, TimeoutError) else "error")
 
     def _settle_stats(self, ticket: QueryTicket) -> None:
         if ticket.admitted_at is not None:
@@ -402,6 +470,7 @@ class SlotScheduler:
             ticket.finished_at = self.clock()
             self._settle_stats(ticket)
             self.completed += 1
+            self._record_ticket(ticket, "ok")
 
     def _expire(self, now: float) -> None:
         for ticket in [t for t in self.waiting
@@ -426,9 +495,27 @@ class SlotScheduler:
                 self._fail(a.ticket, TimeoutError("query deadline exceeded"))
             self.preempted += 1
 
+    def _pop_next(self) -> QueryTicket:
+        """Next ticket to admit.  FIFO by default; ``edf`` picks the
+        earliest (strictly smallest) deadline, falling back to FIFO
+        order when no waiting ticket carries a deadline — so
+        deadline-less traffic is never starved by policy alone, and
+        equal deadlines keep submission order."""
+        if self.admission_policy == "edf":
+            best_i, best_d = -1, None
+            for i, t in enumerate(self.waiting):
+                if t.deadline is not None \
+                        and (best_d is None or t.deadline < best_d):
+                    best_i, best_d = i, t.deadline
+            if best_i >= 0:
+                ticket = self.waiting[best_i]
+                del self.waiting[best_i]
+                return ticket
+        return self.waiting.popleft()
+
     def _admit(self, now: float) -> None:
         while self.waiting and len(self.active) < self.max_slots:
-            ticket = self.waiting.popleft()
+            ticket = self._pop_next()
             ticket.admitted_at = now
             ticket.stats.queue_wait_s = now - ticket.submitted_at
             self._hist_queue_wait.observe(ticket.stats.queue_wait_s)
@@ -445,6 +532,24 @@ class SlotScheduler:
         eng = self.engine
         q = ticket.query
         key = result_key(q)
+        if q.explain is not None:
+            # ANALYZE: execute under a private tracer even when cached —
+            # the per-superstep timeline is the point.  Delegated
+            # synchronously, like other multi-stage admissions.
+            from ..obs import explain as oexplain
+            self.delegated += 1
+            ticket.state = "running"
+            remaining = None
+            if ticket.deadline is not None:
+                remaining = ticket.deadline - now
+                if remaining <= 0:
+                    raise TimeoutError("query deadline exceeded")
+            report, out = oexplain.analyze_query(
+                eng, q, stats=ticket.stats, deadline_s=remaining)
+            oexplain.deliver(q.explain, report)
+            ticket.epoch = eng.epoch
+            self._finish(ticket, out, key, eng._footprint(rx.parse(q.expr)))
+            return
         cached = eng.results.get_covering(key)
         if cached is not None:
             ticket.epoch = eng.epoch
@@ -458,6 +563,7 @@ class SlotScheduler:
             ticket.finished_at = self.clock()
             self._settle_stats(ticket)
             self.completed += 1
+            self._record_ticket(ticket, "ok", cache_hit=True)
             return
         ast = rx.parse(q.expr)
         footprint = eng._footprint(ast)
@@ -595,9 +701,16 @@ class AsyncServer:
     flight.
 
     ``metrics_port`` (``0`` picks a free port, exposed as
-    ``metrics_addr`` once entered) serves the scheduler's Prometheus
-    text exposition over HTTP on every path — scrape it with e.g.
-    ``curl http://127.0.0.1:<port>/metrics``."""
+    ``metrics_addr`` once entered) serves the observability endpoints
+    over HTTP:
+
+      * ``/`` and ``/metrics`` — the scheduler's Prometheus text
+        exposition
+      * ``/flight`` — the flight recorder's current ring as a versioned
+        JSONL workload (replayable via ``benchmarks/replay.py``)
+      * ``/explain?expr=...[&subject=][&obj=][&limit=][&analyze=1]`` —
+        a JSON EXPLAIN (or ANALYZE) report from :mod:`repro.obs.explain`
+    """
 
     def __init__(self, scheduler: SlotScheduler,
                  idle_sleep_s: float = 0.001,
@@ -633,20 +746,59 @@ class AsyncServer:
 
     async def _serve_metrics(self, reader: asyncio.StreamReader,
                              writer: asyncio.StreamWriter) -> None:
-        # one-shot HTTP/1.0-style exchange: read the request head, answer
-        # with the text exposition, close — all a scraper needs
+        # one-shot HTTP/1.0-style exchange: read the request head, route
+        # on the path, answer, close — all a scraper needs
         try:
+            request = (await reader.readline()).decode("latin-1", "replace")
             while (await reader.readline()) not in (b"\r\n", b"\n", b""):
                 pass
-            body = self.scheduler.prometheus_text().encode()
+            status, ctype, body = self._route(request)
             writer.write(
-                b"HTTP/1.0 200 OK\r\n"
-                b"Content-Type: text/plain; version=0.0.4\r\n"
+                b"HTTP/1.0 " + status + b"\r\n"
+                b"Content-Type: " + ctype + b"\r\n"
                 b"Content-Length: " + str(len(body)).encode() + b"\r\n"
                 b"Connection: close\r\n\r\n" + body)
             await writer.drain()
         finally:
             writer.close()
+
+    def _route(self, request_line: str) -> Tuple[bytes, bytes, bytes]:
+        """(status, content-type, body) for one request line."""
+        from urllib.parse import parse_qs, urlsplit
+        parts = request_line.split()
+        url = urlsplit(parts[1] if len(parts) >= 2 else "/")
+        path = url.path or "/"
+        if path in ("/", "/metrics"):
+            return (b"200 OK", b"text/plain; version=0.0.4",
+                    self.scheduler.prometheus_text().encode())
+        if path == "/flight":
+            return (b"200 OK", b"application/x-ndjson",
+                    self.scheduler.recorder.dumps().encode())
+        if path == "/explain":
+            qargs = parse_qs(url.query)
+
+            def arg(name):
+                v = qargs.get(name, [None])[0]
+                return int(v) if v not in (None, "") else None
+
+            expr = qargs.get("expr", [None])[0]
+            if not expr:
+                return (b"400 Bad Request", b"text/plain",
+                        b"missing expr parameter\n")
+            analyze = qargs.get("analyze", ["0"])[0] \
+                not in ("0", "", "false")
+            try:
+                from ..obs import explain as oexplain
+                report = oexplain.explain_query(
+                    self.scheduler.engine,
+                    Query(expr, arg("subject"), arg("obj"), arg("limit")),
+                    analyze=analyze)
+                body = json.dumps(report, sort_keys=True) + "\n"
+                return (b"200 OK", b"application/json", body.encode())
+            except Exception as e:
+                return (b"400 Bad Request", b"text/plain",
+                        f"{type(e).__name__}: {e}\n".encode())
+        return (b"404 Not Found", b"text/plain", b"not found\n")
 
     async def submit(self, query: QueryLike,
                      deadline_s: Optional[float] = None) -> AsyncTicket:

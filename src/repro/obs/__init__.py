@@ -16,6 +16,14 @@ Two halves, both stdlib-only (the standing optional-dep policy — the
     rows, and Prometheus text exposition (served by
     :class:`repro.core.scheduler.AsyncServer` when ``metrics_port`` is
     set).
+  * :mod:`repro.obs.explain` — per-query EXPLAIN/ANALYZE reports
+    (planner decision, selectivity inputs, predicted collective bytes,
+    and — when analyzing — the per-superstep frontier timeline with
+    est-vs-actual frontier error), served over ``/explain``.
+  * :mod:`repro.obs.recorder` — the always-on flight recorder: a
+    bounded ring buffer of settled-query records in the slot scheduler,
+    dumped as a versioned JSONL workload that ``benchmarks/replay.py``
+    re-executes with result-count parity (served over ``/flight``).
 
 The module-level tracer is OFF by default; every instrumented call site
 then costs one attribute read + one branch and allocates nothing
@@ -27,13 +35,17 @@ row).  Enable it around a region of interest::
     ... serve ...
     obs.trace.TRACER.export("trace.json")   # open in Perfetto
 """
-from . import metrics, trace
+from . import explain, metrics, recorder, trace
+from .explain import ExplainSink, analyze_query, explain_query, validate_report
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       diff_snapshots)
+from .recorder import FlightRecorder
 from .trace import NULL_SPAN, Tracer, bypass, instant, span, use
 
 __all__ = [
-    "metrics", "trace",
+    "explain", "metrics", "recorder", "trace",
+    "ExplainSink", "analyze_query", "explain_query", "validate_report",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "diff_snapshots",
+    "FlightRecorder",
     "NULL_SPAN", "Tracer", "bypass", "instant", "span", "use",
 ]

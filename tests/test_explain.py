@@ -1,0 +1,385 @@
+"""EXPLAIN/ANALYZE reports and the flight recorder.
+
+EXPLAIN determinism (byte-identical JSON across runs, both engines) and
+the execution-free guarantee (zero kernel-dispatch spans, zero engine
+superstep spans), ANALYZE superstep-timeline invariants across planner
+shapes (ring: per-superstep activations sum to the query's
+node-state activations; dense: each superstep's frontier equals the
+previous one's new activations; est-vs-actual frontier error recorded
+for every planned query), the ``Query(explain=...)`` sink through
+``eval_many`` and the slot scheduler, recorder capture -> dump -> load
+-> replay parity under interleaved updates, bounded-ring drop
+accounting, earliest-deadline-first admission, and the self-
+observability metrics in ``prometheus_text()``.
+"""
+import asyncio
+import json
+
+import pytest
+
+from repro.core.engines import Query, eval_many, make_engine
+from repro.core.fixtures import random_graph
+from repro.core.scheduler import AsyncServer, Backpressure, SlotScheduler
+from repro.obs import explain as oexplain
+from repro.obs import recorder as orecorder
+from repro.obs import trace as ot
+from repro.obs.explain import ExplainSink, validate_report
+
+
+def _graph(seed=3):
+    return random_graph(12, 3, 40, seed=seed, pred_zipf=False)
+
+
+# ---------------------------------------------------------------------
+# EXPLAIN: deterministic, schema-valid, and execution-free
+# ---------------------------------------------------------------------
+
+def test_explain_is_deterministic_and_execution_free():
+    g = _graph()
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        q = Query("0/1*", obj=2)
+        tr = ot.Tracer()
+        tr.enable()
+        with ot.use(tr):
+            r1 = eng.explain(q)
+        validate_report(r1)
+        assert r1["engine"] == kind and r1["analyze"] is False
+        assert "execution" not in r1
+        # the acceptance assertion: EXPLAIN never executes a superstep
+        kernel = [e for e in tr.events if e.get("cat") == "kernel"]
+        steps = [e for e in tr.events if e["name"].endswith(".superstep")]
+        assert kernel == [] and steps == [], (kind, tr.events)
+        # byte-identical across runs (sorted keys; no wall-clock fields)
+        r2 = eng.explain(q)
+        assert json.dumps(r1, sort_keys=True) == json.dumps(r2,
+                                                            sort_keys=True)
+
+
+def test_explain_report_contents():
+    g = _graph()
+    eng = make_engine(g, "dense")
+    r = eng.explain(Query("(0|1)/2", obj=4))
+    assert r["automaton"]["states"] == 4          # 3 literals -> m+1
+    assert r["plan"]["mode"] in ("forward", "reverse", "split", "naive")
+    lits = {row["lit"] for row in r["selectivity"]["literals"]}
+    assert lits == {"0", "1", "2"}
+    for row in r["selectivity"]["literals"]:
+        assert row["freq"] >= 0 and row["distinct_subj"] >= 0
+    assert r["collective"]["bytes_per_superstep"] == 0   # single shard
+    assert r["result_cached"] is False
+    # a cached result is reported as such (still no execution; only
+    # eval_many / the scheduler populate the result cache)
+    eng.eval_many([Query("(0|1)/2", obj=4)])
+    assert eng.explain(Query("(0|1)/2", obj=4))["result_cached"] is True
+
+
+# ---------------------------------------------------------------------
+# ANALYZE: timeline invariants across planner shapes, both engines
+# ---------------------------------------------------------------------
+
+def test_analyze_timeline_invariants_across_planner_shapes():
+    g = random_graph(14, 3, 50, seed=5, pred_zipf=False)
+    cases = [
+        ("cost", Query("0/1*", obj=3)),                  # anchored, obj
+        ("reverse", Query("0/1*", subject=1, obj=3)),    # forced reverse
+        ("cost", Query("0/1*", subject=3)),              # anchored, subj
+        ("cost", Query("(0|1)/2", subject=1, obj=4)),    # both bound
+        ("split", Query("0/1", obj=2)),                  # forced split
+        ("cost", Query("0/1*")),                         # unanchored
+    ]
+    for kind in ("ring", "dense"):
+        modes = set()
+        for planner, q in cases:
+            eng = make_engine(g, kind, planner=planner)
+            want = make_engine(g, kind).eval(q.expr, q.subject, q.obj)
+            report, res = oexplain.analyze_query(eng, q)
+            validate_report(report)
+            assert res == want, (kind, planner, q.expr)
+            assert report["analyze"] is True
+            ex = report["execution"]
+            modes.add(report["plan"]["mode"])
+            # est-vs-actual recorded for every planned query
+            assert isinstance(ex["frontier_error"], float)
+            assert ex["est_frontier"] == report["plan"]["est_frontier"]
+            assert ex["results"] == len(res)
+            tl = ex["timeline"]
+            assert ex["supersteps"] == len(tl) >= 1
+            for row in tl:
+                assert row["frontier"] >= 0 and row["activations"] >= 0
+            if kind == "ring":
+                # frontier activations sum to the query's node-state
+                # activations (the stepper's own accounting)
+                assert (sum(r["activations"] for r in tl)
+                        == ex["stats"]["node_state_activations"])
+            elif q.subject is not None or q.obj is not None:
+                # one BFS run: each superstep's frontier is exactly the
+                # previous superstep's newly-activated states
+                for a, b in zip(tl, tl[1:]):
+                    assert b["frontier"] == a["activations"]
+                assert ex["kernel_dispatches"] == len(tl)
+        assert "split" in modes and len(modes) >= 3, (kind, modes)
+
+
+def test_analyze_respects_scheduler_deadline():
+    g = _graph()
+    clk = [0.0]
+    sched = SlotScheduler(make_engine(g, "ring"), max_slots=1,
+                          clock=lambda: clk[0])
+    sink = ExplainSink()
+    t = sched.submit(Query("0/1*", obj=2, explain=sink), deadline_s=1.0)
+    clk[0] = 5.0                       # expires before admission
+    sched.drain()
+    with pytest.raises(TimeoutError):
+        t.result()
+    assert sink.report is None         # never delivered for a dead query
+
+
+# ---------------------------------------------------------------------
+# Query(explain=...) through eval_many and the scheduler
+# ---------------------------------------------------------------------
+
+def test_eval_many_delivers_explain_reports():
+    g = _graph(seed=7)
+    plain = [Query("0/1*", obj=2), Query("2+", subject=1), Query("(0|1)/2")]
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        want = eval_many(make_engine(g, kind), plain)
+        sinks = [ExplainSink(), {}, ExplainSink()]
+        tagged = [Query(q.expr, subject=q.subject, obj=q.obj, explain=s)
+                  for q, s in zip(plain, sinks)]
+        got = eng.eval_many(tagged)
+        assert got == want
+        for s in sinks:
+            report = s.report if isinstance(s, ExplainSink) else s
+            validate_report(report)
+            assert report["engine"] == kind and report["analyze"] is True
+        # explain is excluded from the query identity: the tagged run
+        # populated the result cache for the plain queries
+        h0 = eng.results.hits
+        assert eng.eval_many(plain) == want
+        assert eng.results.hits > h0
+
+
+def test_scheduler_analyzes_even_when_cached():
+    g = _graph(seed=9)
+    eng = make_engine(g, "dense")
+    sched = SlotScheduler(eng, max_slots=2)
+    q = Query("0/1*", obj=3)
+    t0 = sched.submit(q)
+    sched.drain()
+    sink = ExplainSink()
+    t1 = sched.submit(Query(q.expr, obj=q.obj, explain=sink))
+    sched.drain()
+    assert t1.result() == t0.result()
+    validate_report(sink.report)
+    assert sink.report["execution"]["timeline"], \
+        "ANALYZE must execute (and produce a timeline) despite the cache"
+
+
+# ---------------------------------------------------------------------
+# flight recorder: capture -> dump -> load -> replay parity
+# ---------------------------------------------------------------------
+
+def test_recorder_capture_dump_replay_parity_under_updates(tmp_path):
+    g = _graph(seed=11)
+    for kind in ("ring", "dense"):
+        eng = make_engine(g, kind)
+        sched = SlotScheduler(eng, max_slots=2)
+        # interleave updates into the stream, then the recorded queries
+        # (they settle at the final epoch, so the capture replays
+        # bit-for-bit against the final effective graph)
+        sched.submit_update(add=[(0, 1, 5), (3, 0, 7)])
+        sched.submit_update(remove=[(0, 1, 5)])
+        sched.drain()
+        queries = [Query("0/1*", obj=2), Query("2+", subject=1),
+                   Query("(0|1)/2", obj=4), Query("0/1*", obj=2),
+                   Query("0*", subject=2, limit=3)]
+        for q in queries:
+            sched.submit(q)
+        sched.drain()
+        path = str(tmp_path / f"wl-{kind}.jsonl")
+        sched.recorder.dump(path, graph={"fixture": "random_graph",
+                                         "args": [12, 3, 40]})
+        header, records = orecorder.load(path)
+        assert header["records"] == len(records) == len(queries)
+        ok = [r for r in records if r["status"] == "ok"]
+        assert len(ok) == len(queries)
+        assert any(r["cache_hit"] for r in ok)       # the repeat query
+        # replay on a fresh engine built from the final effective graph
+        replay_eng = make_engine(eng.effective_graph(), kind)
+        outs = replay_eng.eval_many(
+            [Query(r["expr"], subject=r["subject"], obj=r["obj"],
+                   limit=r["limit"]) for r in ok])
+        for r, out in zip(ok, outs):
+            want = r["results"] if r["limit"] is None \
+                else min(r["results"], r["limit"])
+            assert len(out) == want, (kind, r["expr"])
+
+
+def test_recorder_records_timeouts_and_backpressure():
+    g = _graph(seed=13)
+    clk = [0.0]
+    sched = SlotScheduler(make_engine(g, "ring"), max_slots=1, max_queue=2,
+                          clock=lambda: clk[0])
+    sched.submit(Query("0/1*", obj=2), deadline_s=0.5)
+    sched.submit(Query("2+", obj=1))
+    with pytest.raises(Backpressure):                    # overflow queue
+        sched.submit(Query("0*", obj=3))
+    clk[0] = 10.0                                        # deadline expires
+    sched.drain()
+    statuses = [r["status"] for r in sched.recorder.records()]
+    assert "shed" in statuses and "timeout" in statuses
+    shed = next(r for r in sched.recorder.records() if r["status"] == "shed")
+    assert shed["backpressure"] is True and shed["results"] is None
+    for r in sched.recorder.records():
+        orecorder.validate_record(r)
+
+
+def test_recorder_ring_buffer_drop_accounting():
+    rec = orecorder.FlightRecorder(capacity=4)
+    base = {k: None for k in orecorder.REQUIRED_KEYS}
+    for i in range(10):
+        rec.append(dict(base, ts=float(i), status="ok"))
+    assert rec.appended == 10 and rec.dropped == 6 and rec.occupancy == 4
+    assert [r["ts"] for r in rec.records()] == [6.0, 7.0, 8.0, 9.0]
+    h = rec.header()
+    assert (h["appended"], h["dropped"], h["records"]) == (10, 6, 4)
+    # capacity 0 disables retention: every append is a drop
+    off = orecorder.FlightRecorder(capacity=0)
+    off.append(dict(base, ts=0.0, status="ok"))
+    assert off.appended == 1 == off.dropped and off.occupancy == 0
+    # schema validation rejects key-incomplete / bad-status records
+    with pytest.raises(ValueError):
+        orecorder.validate_record({"ts": 0.0})
+    with pytest.raises(ValueError):
+        orecorder.validate_record(dict(base, status="exploded"))
+    with pytest.raises(ValueError):
+        orecorder.validate_header({"kind": "not-a-flight"})
+
+
+def test_recorder_dump_is_schema_valid_jsonl(tmp_path):
+    rec = orecorder.FlightRecorder(capacity=8)
+    base = {k: None for k in orecorder.REQUIRED_KEYS}
+    for i in range(3):
+        rec.append(dict(base, ts=float(i), status="ok"))
+    path = str(tmp_path / "wl.jsonl")
+    rec.dump(path, graph={"fixture": "random_graph", "args": [12, 3, 40]})
+    header, records = orecorder.load(path)
+    assert header["kind"] == orecorder.RECORD_KIND
+    assert header["version"] == orecorder.RECORD_VERSION
+    assert header["graph"]["fixture"] == "random_graph"
+    assert len(records) == 3
+    # record lines are key-sorted (byte-stable dumps)
+    lines = open(path).read().splitlines()
+    for ln in lines[1:]:
+        assert ln == json.dumps(json.loads(ln), sort_keys=True)
+
+
+# ---------------------------------------------------------------------
+# earliest-deadline-first admission
+# ---------------------------------------------------------------------
+
+def test_edf_admission_pulls_earliest_deadline_forward():
+    g = _graph(seed=2)
+
+    def run(policy):
+        clk = [0.0]
+        sched = SlotScheduler(make_engine(g, "ring"), max_slots=1,
+                              admission_policy=policy,
+                              clock=lambda: clk[0])
+        order = []
+        orig = sched._admit_one
+
+        def spy(ticket, now):
+            order.append(ticket.query.expr)
+            return orig(ticket, now)
+
+        sched._admit_one = spy
+        # one ticket occupies the single slot; the rest queue up
+        sched.submit(Query("0/1*", obj=2))
+        sched.step()
+        sched.submit(Query("2+", obj=1), deadline_s=100.0)
+        sched.submit(Query("0*", obj=3), deadline_s=5.0)
+        sched.submit(Query("(0|1)/2", obj=4))          # deadline-less
+        sched.drain()
+        return order
+
+    # EDF: strictly-earliest deadline first, then FIFO for the rest
+    assert run("edf") == ["0/1*", "0*", "2+", "(0|1)/2"]
+    # FIFO control: submission order
+    assert run("fifo") == ["0/1*", "2+", "0*", "(0|1)/2"]
+
+
+def test_admission_policy_is_validated():
+    g = _graph(seed=2)
+    with pytest.raises(ValueError):
+        SlotScheduler(make_engine(g, "ring"), admission_policy="lifo")
+
+
+# ---------------------------------------------------------------------
+# self-observability: the obs layer reports on itself
+# ---------------------------------------------------------------------
+
+def test_prometheus_exports_self_observability_metrics():
+    g = _graph(seed=4)
+    sched = SlotScheduler(make_engine(g, "dense"), max_slots=2)
+    q = Query("0/1*", obj=2)
+    sched.submit(q)
+    sched.drain()                               # publish before the repeat
+    sched.submit(Query(q.expr, obj=q.obj))      # a result-cache hit
+    sched.drain()
+    text = sched.prometheus_text()
+    for name in ("rpq_tracer_dropped_events_total",
+                 "rpq_result_cache_hit_rate", "rpq_plan_cache_hit_rate",
+                 "rpq_recorder_occupancy", "rpq_recorder_appended_total",
+                 "rpq_recorder_dropped_total"):
+        assert name in text, name
+    lines = dict(ln.rsplit(" ", 1) for ln in text.splitlines()
+                 if ln and not ln.startswith("#"))
+    assert float(lines["rpq_recorder_occupancy"]) == 2.0
+    assert float(lines["rpq_recorder_appended_total"]) == 2.0
+    hit_rate = float(lines["rpq_result_cache_hit_rate"])
+    assert 0.0 < hit_rate <= 1.0
+
+
+def test_async_server_flight_and_explain_endpoints():
+    g = _graph(seed=6)
+    sched = SlotScheduler(make_engine(g, "dense"), max_slots=2)
+
+    async def scrape(server, target):
+        host, port = server.metrics_addr
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(f"GET {target} HTTP/1.0\r\n\r\n".encode())
+        await writer.drain()
+        raw = (await reader.read()).decode()
+        writer.close()
+        status = int(raw.split(" ", 2)[1])
+        return status, raw.split("\r\n\r\n", 1)[1]
+
+    async def main():
+        async with AsyncServer(sched, metrics_port=0) as server:
+            t = await server.submit(Query("0/1*", obj=2))
+            await t.result()
+            flight = await scrape(server, "/flight")
+            plan = await scrape(server, "/explain?expr=0%2F1%2A&obj=2")
+            analyzed = await scrape(
+                server, "/explain?expr=0%2F1%2A&obj=2&analyze=1")
+            missing = await scrape(server, "/explain")
+            nope = await scrape(server, "/nope")
+        return flight, plan, analyzed, missing, nope
+
+    flight, plan, analyzed, missing, nope = asyncio.run(main())
+    assert flight[0] == 200
+    header = json.loads(flight[1].splitlines()[0])
+    orecorder.validate_header(header)
+    assert header["records"] == 1
+    assert plan[0] == 200
+    report = json.loads(plan[1])
+    validate_report(report)
+    assert "execution" not in report
+    assert analyzed[0] == 200
+    analyzed_report = json.loads(analyzed[1])
+    validate_report(analyzed_report)
+    assert analyzed_report["execution"]["timeline"]
+    assert missing[0] == 400 and nope[0] == 404
